@@ -1,0 +1,44 @@
+"""Paper Table 1: utilisation of GPT-3 / Gopher / MT-NLG / PaLM.
+
+We re-predict each system's MFU with the analytical cost model on its OWN
+hardware + published parallelisation degrees, and report predicted vs the
+survey's reported number. Matching within a factor ~1.5x validates that the
+cost model captures the regime each system sits in (the survey's point:
+PaLM > Gopher > MT-NLG > GPT-3)."""
+from __future__ import annotations
+
+import time
+
+from repro.configs.base import ShapeConfig
+from repro.core.costmodel import estimate
+from benchmarks.paper_cases import TABLE1
+
+
+def run() -> list:
+    rows = []
+    for name, cfg, hw, chips, deg, batch, seq, reported in TABLE1:
+        t0 = time.perf_counter_ns()
+        shape = ShapeConfig(name="case", seq_len=seq, global_batch=batch,
+                            kind="train")
+        cb = estimate(cfg, shape, deg, hw)
+        us = (time.perf_counter_ns() - t0) / 1e3
+        pred = cb.mfu * 100
+        rows.append({
+            "name": f"table1/{name}",
+            "us_per_call": round(us, 1),
+            "derived": (f"pred_mfu={pred:.1f}% reported={reported}% "
+                        f"ratio={pred / reported:.2f} "
+                        f"bottleneck={'coll' if cb.t_collective > cb.t_compute else 'comp'}"),
+        })
+    # ordering check — the survey's qualitative claim
+    preds = {r["name"].split("/")[1]: float(r["derived"].split("=")[1]
+                                            .split("%")[0]) for r in rows}
+    ok = preds["PaLM"] > preds["Gopher"] and preds["PaLM"] > preds["GPT-3"]
+    rows.append({"name": "table1/ordering_palm_highest",
+                 "us_per_call": 0.0, "derived": f"holds={ok}"})
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r)

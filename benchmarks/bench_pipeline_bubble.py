@@ -1,0 +1,60 @@
+"""Paper Fig. 5c/5d: the pipeline bubble and its reduction by micro-batching.
+Two parts: (a) the schedule simulator vs the closed form (p-1)/(m+p-1);
+(b) the REAL shard_map GPipe pipeline on a 4-stage CPU mesh — measured
+wall time vs microbatch count must show the bubble amortising."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.pipeline import pipeline_apply, simulate_schedule
+
+
+def run() -> list:
+    rows = []
+    for p, m in [(4, 1), (4, 4), (4, 16), (4, 64), (8, 8), (8, 64)]:
+        sim = simulate_schedule(p, m, schedule="gpipe")
+        closed = (p - 1) / (m + p - 1)
+        rows.append({
+            "name": f"fig5/sim_p{p}_m{m}",
+            "us_per_call": 0.0,
+            "derived": (f"bubble={sim['bubble_fraction']:.4f} "
+                        f"closed_form={closed:.4f} "
+                        f"match={abs(sim['bubble_fraction'] - closed) < 1e-9}"),
+        })
+
+    # real pipeline wall time (CPU, 4 fake devices on the pipe axis)
+    if len(jax.devices()) >= 4:
+        mesh = jax.make_mesh((1, 4, 1), ("data", "pipe", "model"),
+                             axis_types=(jax.sharding.AxisType.Auto,) * 3)
+        d, mb, stages = 256, 4, 4
+        w = jax.random.normal(jax.random.key(0), (stages, d, d)) * 0.1
+
+        def stage_fn(pw, xx):
+            for _ in range(4):
+                xx = jnp.tanh(xx @ pw)
+            return xx
+
+        for m in (1, 4, 16):
+            x = jax.random.normal(jax.random.key(1), (m * mb, d))
+            f = jax.jit(lambda w, x: pipeline_apply(
+                stage_fn, w, x, mesh=mesh, num_microbatches=m))
+            f(w, x).block_until_ready()
+            t0 = time.perf_counter_ns()
+            for _ in range(3):
+                f(w, x).block_until_ready()
+            us = (time.perf_counter_ns() - t0) / 3e3
+            # per-token time should DROP with m (bubble amortised)
+            rows.append({
+                "name": f"fig5/shardmap_gpipe_m{m}",
+                "us_per_call": round(us, 1),
+                "derived": f"us_per_microbatch={us / m:.1f}",
+            })
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r)

@@ -1,0 +1,39 @@
+"""Deliverable (g): the roofline table, read from the dry-run artifacts in
+experiments/dryrun/. One row per (arch x shape x mesh): the three terms,
+the bottleneck, and MODEL_FLOPS/HLO_FLOPs."""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+DRYRUN_DIR = Path(__file__).resolve().parents[1] / "experiments" / "dryrun"
+
+
+def run() -> list:
+    rows = []
+    for fn in sorted(DRYRUN_DIR.glob("*.json")):
+        rec = json.loads(fn.read_text())
+        if rec.get("status") != "ok":
+            rows.append({"name": f"roofline/{fn.stem}", "us_per_call": 0.0,
+                         "derived": rec.get("status", "?")})
+            continue
+        r = rec["roofline"]
+        rows.append({
+            "name": f"roofline/{fn.stem}",
+            "us_per_call": round(rec.get("compile_s", 0) * 1e6, 0),
+            "derived": (f"comp={r['t_compute_s']:.2e}s "
+                        f"mem={r['t_memory_s']:.2e}s "
+                        f"coll={r['t_collective_s']:.2e}s "
+                        f"bottleneck={r['bottleneck']} "
+                        f"useful={r['useful_ratio']:.2f} "
+                        f"mem/dev={r['mem_per_device_gb']:.1f}GB"),
+        })
+    if not rows:
+        rows.append({"name": "roofline/none", "us_per_call": 0.0,
+                     "derived": "run launch/dryrun.py first"})
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r)

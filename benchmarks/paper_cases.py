@@ -1,0 +1,57 @@
+"""The paper's case-study models (Tables 1-2) as configs + reported numbers.
+
+These drive bench_mfu_table1 / bench_table2_strategies: we re-predict each
+system's utilisation with our analytical cost model and compare against the
+published figure — the survey's own data is the validation target.
+"""
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.core.costmodel import A100, Degrees, TPU_V3, TPU_V4, V100
+
+# dense GPT-family configs (public numbers)
+GPT3_175B = ModelConfig(name="gpt3-175b", arch_type="dense", num_layers=96,
+                        d_model=12288, num_heads=96, num_kv_heads=96,
+                        d_ff=4 * 12288, vocab_size=50257)
+GOPHER_280B = ModelConfig(name="gopher-280b", arch_type="dense",
+                          num_layers=80, d_model=16384, num_heads=128,
+                          num_kv_heads=128, d_ff=4 * 16384,
+                          vocab_size=32000)
+MT_NLG_530B = ModelConfig(name="mt-nlg-530b", arch_type="dense",
+                          num_layers=105, d_model=20480, num_heads=128,
+                          num_kv_heads=128, d_ff=4 * 20480,
+                          vocab_size=50257)
+PALM_540B = ModelConfig(name="palm-540b", arch_type="dense", num_layers=118,
+                        d_model=18432, num_heads=48, num_kv_heads=1,
+                        d_ff=4 * 18432, vocab_size=256000)
+MEGATRON_8B = ModelConfig(name="megatron-8.3b", arch_type="dense",
+                          num_layers=72, d_model=3072, num_heads=32,
+                          num_kv_heads=32, d_ff=4 * 3072, vocab_size=50257)
+MEGATRON_1T = ModelConfig(name="megatron-1t", arch_type="dense",
+                          num_layers=128, d_model=25600, num_heads=160,
+                          num_kv_heads=160, d_ff=4 * 25600,
+                          vocab_size=50257)
+
+# Table 1 rows: (config, hardware, chips, degrees, batch, seq, reported MFU%)
+TABLE1 = [
+    ("GPT-3", GPT3_175B, V100, 10000,
+     Degrees(dp=1250, tp=8, pp=1, microbatches=8), 1536, 2048, 21.3),
+    ("Gopher", GOPHER_280B, TPU_V3, 4096,
+     Degrees(dp=512, tp=2, pp=4, microbatches=8), 2048, 2048, 32.5),
+    ("Megatron-Turing", MT_NLG_530B, A100, 2240,
+     Degrees(dp=8, tp=8, pp=35, microbatches=32), 1920, 2048, 30.2),
+    ("PaLM", PALM_540B, TPU_V4, 6144,
+     Degrees(dp=512, tp=12, pp=1, microbatches=4), 2048, 2048, 46.2),
+]
+
+# Table 2 rows: Megatron-family ad hoc strategies
+TABLE2 = [
+    ("Shoeybi'20 [28]", MEGATRON_8B, A100, Degrees(dp=8, tp=8, pp=1,
+                                                   microbatches=4),
+     512, 1024, None),          # paper reports <30% hardware util
+    ("Narayanan'21 [21]", MEGATRON_1T, A100,
+     Degrees(dp=6, tp=8, pp=64, microbatches=128), 3072, 2048, 52.0),
+    ("Smith'22 [29]", MT_NLG_530B, A100,
+     Degrees(dp=12, tp=8, pp=35, microbatches=32), 1920, 2048, 36.2),
+    ("Korthikanti'23 [14]", MEGATRON_1T, A100,
+     Degrees(dp=1, tp=8, pp=64, microbatches=128, seq_parallel=True),
+     512, 2048, 56.3),
+]

@@ -1,0 +1,54 @@
+"""End-to-end driver (deliverable b): train a ~100M-parameter dense LM for a
+few hundred steps on the synthetic corpus, with sharding, checkpointing and
+metrics — the full production path at laptop scale.
+
+    PYTHONPATH=src python examples/train_lm.py [--steps 300] [--d-model 512]
+"""
+import argparse
+
+import jax
+
+from repro.configs.base import ModelConfig
+from repro.core.strategy import Strategy
+from repro.launch.mesh import make_host_mesh
+from repro.train.trainer import TrainConfig, Trainer
+
+
+def build_config(d_model: int) -> ModelConfig:
+    # ~100M params at d_model=640: 12L, vocab 8k
+    return ModelConfig(name="lm-100m", arch_type="dense", num_layers=12,
+                       d_model=d_model, num_heads=d_model // 64,
+                       num_kv_heads=max(1, d_model // 128),
+                       d_ff=4 * d_model, vocab_size=8192, dtype="float32")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--d-model", type=int, default=640)
+    ap.add_argument("--batch", type=int, default=16)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--checkpoint-dir", default="checkpoints/train_lm")
+    args = ap.parse_args()
+
+    cfg = build_config(args.d_model)
+    n = cfg.param_count()
+    print(f"model: {cfg.name} — {n/1e6:.1f}M params, "
+          f"{cfg.num_layers}L d={cfg.d_model}")
+
+    mesh = make_host_mesh(model=1)
+    strategy = Strategy(remat=False, microbatches=2, dtype="float32")
+    tc = TrainConfig(steps=args.steps, lr=6e-4, log_every=20,
+                     checkpoint_every=max(args.steps // 3, 1),
+                     checkpoint_dir=args.checkpoint_dir)
+    trainer = Trainer(cfg, strategy, mesh, tc,
+                      global_batch=args.batch, seq_len=args.seq)
+    trainer.maybe_restore()
+    trainer.run()
+    first, last = trainer.history[0]["loss"], trainer.history[-1]["loss"]
+    print(f"\nloss {first:.3f} -> {last:.3f} "
+          f"({(1 - last / first):.0%} reduction)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,93 @@
+"""Assemble the §Dry-run and §Roofline sections of EXPERIMENTS.md from the
+dry-run JSON artifacts. §Claims and §Perf are maintained by hand.
+
+    PYTHONPATH=src python experiments/build_report.py > experiments/roofline.md
+"""
+import json
+from pathlib import Path
+
+HERE = Path(__file__).resolve().parent
+DRY = HERE / "dryrun"
+
+
+def fmt(x, nd=2):
+    if x == 0:
+        return "0"
+    if abs(x) >= 1000 or abs(x) < 0.01:
+        return f"{x:.{nd}e}"
+    return f"{x:.{nd}f}"
+
+
+def load(tag: str, mesh: str):
+    rows = []
+    for fn in sorted(DRY.glob(f"*__{mesh}__{tag}.json")):
+        rows.append(json.loads(fn.read_text()))
+    return rows
+
+
+def roofline_table(rows):
+    out = ["| arch | shape | t_comp (s) | t_mem (s) | t_coll (s) | "
+           "bottleneck | useful | MFU-UB | mem/dev (GB) | fits |",
+           "|---|---|---|---|---|---|---|---|---|---|"]
+    for rec in rows:
+        if rec.get("status") != "ok":
+            out.append(f"| {rec['arch']} | {rec['shape']} | — | — | — | "
+                       f"{rec['status']} | — | — | — | — |")
+            continue
+        r = rec["roofline"]
+        fits = "yes" if r["mem_per_device_gb"] < 16 else "**NO**"
+        out.append(
+            f"| {rec['arch']} | {rec['shape']} | {fmt(r['t_compute_s'])} | "
+            f"{fmt(r['t_memory_s'])} | {fmt(r['t_collective_s'])} | "
+            f"{r['bottleneck']} | {r['useful_ratio']:.2f} | "
+            f"{r['mfu_upper_bound']:.3f} | "
+            f"{r['mem_per_device_gb']:.1f} | {fits} |")
+    return "\n".join(out)
+
+
+def dryrun_table(rows):
+    out = ["| arch | shape | strategy | compile (s) | args (GB/dev) | "
+           "temp (GB/dev) | collectives (counts) |",
+           "|---|---|---|---|---|---|---|"]
+    for rec in rows:
+        if rec.get("status") != "ok":
+            out.append(f"| {rec['arch']} | {rec['shape']} | — | — | — | — | "
+                       f"{rec['status']} |")
+            continue
+        m = rec["memory_analysis"]
+        sd = rec["strategy_detail"]
+        stra = (f"{'sp ' if sd['seq_parallel'] else ''}"
+                f"{'fsdp ' if sd['fsdp'] else ''}{sd['optimizer']} "
+                f"m{sd['microbatches']}")
+        counts = rec["roofline"]["coll_detail"].get("counts", {})
+        cstr = " ".join(f"{k.split('-')[0][:2]}{k.split('-')[-1][:3]}:{v}"
+                        for k, v in counts.items() if v)
+        out.append(
+            f"| {rec['arch']} | {rec['shape']} | {stra} | "
+            f"{rec['compile_s']} | "
+            f"{(m['argument_size_in_bytes'] or 0) / 1e9:.2f} | "
+            f"{(m['temp_size_in_bytes'] or 0) / 1e9:.2f} | {cstr} |")
+    return "\n".join(out)
+
+
+def main():
+    for mesh in ("pod16x16", "pod2x16x16"):
+        rows = load("base", mesh)
+        if not rows:
+            continue
+        chips = 256 if mesh == "pod16x16" else 512
+        print(f"\n### Roofline — {mesh} ({chips} chips, baseline strategy)\n")
+        print(roofline_table(rows))
+    opt = load("opt", "pod16x16")
+    if opt:
+        print("\n### Roofline — pod16x16, beyond-paper optimized strategy "
+              "(SP + CP-decode + triangle prefill + bf16 accum)\n")
+        print(roofline_table(opt))
+    print("\n### Dry-run detail — pod16x16 (baseline)\n")
+    print(dryrun_table(load("base", "pod16x16")))
+    print("\n### Dry-run detail — pod2x16x16 (multi-pod, baseline)\n")
+    print(dryrun_table(load("base", "pod2x16x16")))
+
+
+if __name__ == "__main__":
+    main()

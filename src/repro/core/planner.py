@@ -1,0 +1,160 @@
+"""Auto-parallelisation — the survey's §4 search problem, three ways.
+
+Search space: legal (dp, tp, pp, microbatches, seq_parallel, remat)
+assignments for a chip count, evaluated by core/costmodel.estimate (the
+"strategy evaluation" half of §4). Search methods mirror paper Table 3:
+
+  * "exhaustive"  — PipeDream-style full enumeration,
+  * "dp"          — Alpa-style two-level: dynamic programming over pipeline
+                    stage cuts (from the operator graph) x ILP-lite choice
+                    of intra-op degree per stage,
+  * "mcmc"        — FlexFlow-style Markov-chain Monte-Carlo random walk.
+
+All three return the same Plan record so benchmarks/bench_table3_search.py
+can compare quality vs. search cost — the standardisation the survey's
+Future Work section asks for.
+"""
+from __future__ import annotations
+
+import dataclasses
+import random
+from dataclasses import dataclass, field
+from typing import List, Optional, Tuple
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.core.costmodel import Degrees, Hardware, V5E, estimate
+from repro.core.opgraph import build_opgraph
+
+
+@dataclass
+class Plan:
+    degrees: Degrees
+    cost: float                  # estimated step time (s)
+    mfu: float
+    fits: bool
+    evaluations: int
+    method: str
+    stage_layers: Optional[List[List[int]]] = None
+
+    def row(self) -> dict:
+        d = dataclasses.asdict(self)
+        d["degrees"] = dataclasses.asdict(self.degrees)
+        d.pop("stage_layers")
+        return d
+
+
+def _divisors(n: int) -> List[int]:
+    return [i for i in range(1, n + 1) if n % i == 0]
+
+
+def legal_degrees(cfg: ModelConfig, shape: ShapeConfig,
+                  chips: int) -> List[Degrees]:
+    """Enumerate the strategy space (paper §4 'search-space' challenge:
+    include every exploitable dimension, exclude illegal points)."""
+    out = []
+    heads = max(cfg.num_heads, cfg.ssm_heads, 1)
+    for tp in _divisors(chips):
+        if tp > 2 * heads:                      # no parallelism left to use
+            continue
+        for pp in _divisors(chips // tp):
+            if pp > cfg.num_layers:
+                continue
+            dp = chips // (tp * pp)
+            if shape.global_batch % dp != 0:
+                continue
+            micro_opts = sorted({1, min(shape.global_batch // dp, 4 * pp),
+                                 shape.global_batch // dp})
+            for m in micro_opts:
+                if (shape.global_batch // dp) % m != 0:
+                    continue
+                for sp_flag in ((False, True) if tp > 1 else (False,)):
+                    out.append(Degrees(
+                        dp=dp, tp=tp, pp=pp,
+                        ep=tp if cfg.is_moe else 1,
+                        microbatches=m, seq_parallel=sp_flag,
+                        remat=shape.kind == "train"))
+    return out
+
+
+def _evaluate(cfg, shape, deg, hw) -> Tuple[float, object]:
+    cb = estimate(cfg, shape, deg, hw)
+    penalty = 1.0 if cb.fits else 1e3           # infeasible = heavy penalty
+    return cb.step_time * penalty, cb
+
+
+def search_exhaustive(cfg, shape, chips: int, hw: Hardware = V5E) -> Plan:
+    best, best_cb, n = None, None, 0
+    for deg in legal_degrees(cfg, shape, chips):
+        c, cb = _evaluate(cfg, shape, deg, hw)
+        n += 1
+        if best is None or c < best[0]:
+            best = (c, deg)
+            best_cb = cb
+    return Plan(degrees=best[1], cost=best_cb.step_time, mfu=best_cb.mfu,
+                fits=best_cb.fits, evaluations=n, method="exhaustive")
+
+
+def search_dp(cfg, shape, chips: int, hw: Hardware = V5E) -> Plan:
+    """Two-level: outer loop over (pp, tp); inner DP balances layers into
+    stages by FLOPs from the operator graph (Alpa's hierarchy, simplified:
+    our stages are homogeneous so the DP reduces to balanced cuts)."""
+    graph = build_opgraph(cfg, shape.global_batch, shape.seq_len)
+    best, best_cb, best_stages, n = None, None, None, 0
+    for pp in _divisors(chips):
+        if pp > cfg.num_layers:
+            continue
+        stages = graph.balanced_stages(pp) if pp > 1 else None
+        for tp in _divisors(chips // pp):
+            heads = max(cfg.num_heads, cfg.ssm_heads, 1)
+            if tp > 2 * heads:
+                continue
+            dp = chips // (pp * tp)
+            if shape.global_batch % dp != 0:
+                continue
+            m = min(shape.global_batch // dp, max(1, 4 * pp))
+            while (shape.global_batch // dp) % m != 0:
+                m -= 1
+            deg = Degrees(dp=dp, tp=tp, pp=pp,
+                          ep=tp if cfg.is_moe else 1, microbatches=m,
+                          seq_parallel=tp > 1,
+                          remat=shape.kind == "train")
+            c, cb = _evaluate(cfg, shape, deg, hw)
+            n += 1
+            if best is None or c < best[0]:
+                best, best_cb, best_stages = (c, deg), cb, stages
+    return Plan(degrees=best[1], cost=best_cb.step_time, mfu=best_cb.mfu,
+                fits=best_cb.fits, evaluations=n, method="dp",
+                stage_layers=best_stages)
+
+
+def search_mcmc(cfg, shape, chips: int, hw: Hardware = V5E, *,
+                iters: int = 200, temp: float = 0.05,
+                seed: int = 0) -> Plan:
+    """FlexFlow-style MCMC: random legal moves, accept by Metropolis."""
+    rng = random.Random(seed)
+    space = legal_degrees(cfg, shape, chips)
+    cur = rng.choice(space)
+    cur_cost, cur_cb = _evaluate(cfg, shape, cur, hw)
+    best, best_cb = (cur_cost, cur), cur_cb
+    n = 1
+    for _ in range(iters):
+        cand = rng.choice(space)
+        c, cb = _evaluate(cfg, shape, cand, hw)
+        n += 1
+        import math
+        if c < cur_cost or rng.random() < math.exp(
+                (cur_cost - c) / max(temp * cur_cost, 1e-12)):
+            cur, cur_cost = cand, c
+        if c < best[0]:
+            best, best_cb = (c, cand), cb
+    return Plan(degrees=best[1], cost=best_cb.step_time, mfu=best_cb.mfu,
+                fits=best_cb.fits, evaluations=n, method="mcmc")
+
+
+SEARCH_METHODS = {"exhaustive": search_exhaustive, "dp": search_dp,
+                  "mcmc": search_mcmc}
+
+
+def plan(cfg, shape, chips: int, *, method: str = "exhaustive",
+         hw: Hardware = V5E) -> Plan:
+    return SEARCH_METHODS[method](cfg, shape, chips, hw)

@@ -1,0 +1,59 @@
+"""Logical-axis sharding: the bridge between model code and the mesh.
+
+Model code annotates activations with LOGICAL axis names ("batch", "heads",
+"d_ff", "experts", ...). A Strategy installs a rules table mapping logical
+names to mesh axes (or None). ``constrain`` applies
+``jax.lax.with_sharding_constraint`` only when rules + a mesh are active, so
+the same model code runs unsharded on one CPU device and sharded under pjit
+on the production mesh. This mirrors GSPMD's sharding-annotation programming
+model, which is itself one of the frameworks surveyed by the paper (Table 3).
+"""
+from __future__ import annotations
+
+import threading
+from contextlib import contextmanager
+from typing import Any, Mapping, Optional, Sequence, Union
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+MeshAxes = Union[None, str, tuple]
+
+_state = threading.local()
+
+
+def _rules() -> Optional[Mapping[str, MeshAxes]]:
+    return getattr(_state, "rules", None)
+
+
+def _mesh() -> Optional[Mesh]:
+    return getattr(_state, "mesh", None)
+
+
+@contextmanager
+def sharding_rules(mesh: Mesh, rules: Mapping[str, MeshAxes]):
+    """Activate a logical->mesh axis mapping (and the mesh) for model code."""
+    old = (_rules(), _mesh())
+    _state.rules, _state.mesh = dict(rules), mesh
+    try:
+        yield
+    finally:
+        _state.rules, _state.mesh = old
+
+
+def logical_to_spec(axes: Sequence[Optional[str]],
+                    rules: Optional[Mapping[str, MeshAxes]] = None) -> P:
+    """Map a tuple of logical axis names to a PartitionSpec."""
+    rules = rules if rules is not None else (_rules() or {})
+    return P(*[rules.get(a) if a is not None else None for a in axes])
+
+
+def constrain(x: Any, *axes: Optional[str]):
+    """Sharding-constrain ``x`` by logical axes; no-op without active rules."""
+    rules, mesh = _rules(), _mesh()
+    if rules is None or mesh is None:
+        return x
+    if x.ndim != len(axes):
+        raise ValueError(f"rank {x.ndim} vs logical axes {axes}")
+    spec = logical_to_spec(axes, rules)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))

@@ -1,0 +1,77 @@
+"""Parallelisation Strategy — the paper's taxonomy as a first-class object.
+
+A Strategy fixes, for a given mesh, how each *parallelisable dimension*
+(paper §3.1.2) maps onto mesh axes:
+
+  dp  — data parallelism                 ("data" axis, x "pod" axis)
+  tp  — intra-operator / tensor          ("model" axis; Megatron §5.1)
+  ep  — intra-operator over experts      ("model" axis; MoE archs)
+  pp  — inter-operator / pipeline        (dedicated "pipe" axis; core/pipeline.py)
+  sp  — sequence parallelism             (Korthikanti; seq dim -> "model")
+
+plus the execution knobs the survey's case-studies tune: microbatch count
+(GPipe Fig. 5d), remat (checkpointing §3.1.3), ZeRO-1 optimizer-state
+sharding (DeepSpeed, used by MT-NLG [29]).
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from typing import Optional
+
+from jax.sharding import Mesh
+
+
+@dataclass(frozen=True)
+class Strategy:
+    name: str = "megatron"
+    # parallel degrees are implied by the mesh axes; these flags pick HOW
+    # the logical dims map onto them.
+    seq_parallel: bool = False       # Korthikanti SP (beyond-baseline)
+    expert_parallel: bool = True     # MoE experts on "model" (vs TP-in-expert)
+    zero1: bool = True               # shard optimizer states over "data"
+    fsdp: bool = False               # ZeRO-3: shard PARAMS over "data" too
+    optimizer: str = "adamw"         # adamw | adafactor
+    grad_accum_dtype: str = "float32"  # bfloat16 halves the accumulator
+    remat: bool = True               # full activation checkpointing per layer
+    microbatches: int = 1            # grad-accumulation steps (GPipe Fig. 5d)
+    attn_impl: str = "auto"          # masked | triangle | full | auto
+    dtype: str = "bfloat16"
+
+    def rules(self, mesh: Mesh) -> dict:
+        """Logical-axis -> mesh-axis table for core/pspec.constrain."""
+        axes = mesh.axis_names
+        batch = tuple(a for a in ("pod", "data") if a in axes) or None
+        if batch and len(batch) == 1:
+            batch = batch[0]
+        r = {
+            "batch": batch,
+            "seq": "model" if self.seq_parallel else None,
+            "heads": "model",
+            "kv_heads": "model",
+            "d_ff": "model",
+            "vocab": "model",
+            "ssm_inner": "model",
+            "ssm_heads": "model",
+            "experts": "model" if self.expert_parallel else None,
+            "d_ff_moe": None if self.expert_parallel else "model",
+            # expert-capacity dim of the (E, C, d) dispatch buffer: shard
+            # over "data" so DP replicas split expert work instead of each
+            # computing ALL experts' global capacity (16x compute waste
+            # found in the baseline dry-run — EXPERIMENTS.md §Perf).
+            "moe_cap": batch,
+            # the dispatch scatter / combine gather index dim 0 only, so they
+            # partition cleanly along d -> shard d over "model" just for
+            # those two ops (16x traffic cut on the 1T MoE — §Perf).
+            "moe_dispatch_d": "model",
+            "d_model": None,
+        }
+        return r
+
+    def with_(self, **kw) -> "Strategy":
+        return dataclasses.replace(self, **kw)
+
+
+MEGATRON_BASELINE = Strategy(name="megatron", seq_parallel=False)
+# beyond-paper optimized default: +sequence parallelism
+MEGATRON_SP = Strategy(name="megatron+sp", seq_parallel=True)

@@ -1,0 +1,126 @@
+"""Flash attention as a Pallas TPU kernel.
+
+TPU adaptation of the GPU flash algorithm (DESIGN.md §3): instead of a
+warp-level softmax with shared-memory tiles, we tile HBM->VMEM with
+BlockSpecs sized for the MXU (q/k blocks are multiples of 128 in the lane
+dim) and carry the online-softmax state (m, l, acc) in VMEM scratch across
+the *sequential* kv grid dimension. Causality is handled per-block: fully
+masked blocks are skipped with ``pl.when`` (the compute saving the XLA
+"masked" baseline cannot express).
+
+Grid: (batch*heads, nq, nk) with nk innermost/sequential.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+            causal: bool, window: int, block_q: int, block_k: int,
+            nk: int, sm_scale: float):
+    qi, ki = pl.program_id(1), pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q_start = qi * block_q
+    k_start = ki * block_k
+    # block-level relevance: skip fully-masked (future / out-of-window) blocks
+    relevant = True
+    if causal:
+        relevant = k_start <= q_start + block_q - 1
+    if window > 0:
+        relevant = jnp.logical_and(
+            relevant, k_start + block_k - 1 > q_start - window)
+
+    @pl.when(relevant)
+    def _compute():
+        q = q_ref[0].astype(jnp.float32)              # (bq, d)
+        k = k_ref[0].astype(jnp.float32)              # (bk, d)
+        v = v_ref[0].astype(jnp.float32)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32) * sm_scale  # (bq, bk)
+        qpos = q_start + jax.lax.broadcasted_iota(jnp.int32,
+                                                  (block_q, block_k), 0)
+        kpos = k_start + jax.lax.broadcasted_iota(jnp.int32,
+                                                  (block_q, block_k), 1)
+        mask = jnp.ones((block_q, block_k), jnp.bool_)
+        if causal:
+            mask &= kpos <= qpos
+        if window > 0:
+            mask &= kpos > qpos - window
+        s = jnp.where(mask, s, NEG_INF)
+        m_prev, l_prev = m_ref[...], l_ref[...]
+        m_cur = jnp.max(s, axis=1)
+        m_new = jnp.maximum(m_prev, m_cur)
+        p = jnp.exp(s - m_new[:, None])
+        corr = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_prev * corr + jnp.sum(p, axis=1)
+        m_ref[...] = m_new
+        acc_ref[...] = (acc_ref[...] * corr[:, None]
+                        + jax.lax.dot_general(
+                            p.astype(v.dtype), v, (((1,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32))
+
+    @pl.when(ki == nk - 1)
+    def _finalize():
+        l = l_ref[...]
+        safe = jnp.where(l == 0.0, 1.0, l)
+        o_ref[0] = (acc_ref[...] / safe[:, None]).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "block_q",
+                                             "block_k", "interpret"))
+def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
+                    block_q: int = 128, block_k: int = 128,
+                    interpret: bool = False):
+    """q (B,S,H,D), k/v (B,T,H,D) MHA (pre-repeat GQA heads). -> (B,S,H,D)."""
+    b, s, h, d = q.shape
+    t = k.shape[1]
+    block_q = min(block_q, s)
+    block_k = min(block_k, t)
+    assert s % block_q == 0 and t % block_k == 0
+    nq, nk = s // block_q, t // block_k
+
+    # (B,S,H,D) -> (B*H, S, D) for a clean 3-D blocking
+    qr = q.transpose(0, 2, 1, 3).reshape(b * h, s, d)
+    kr = k.transpose(0, 2, 1, 3).reshape(b * h, t, d)
+    vr = v.transpose(0, 2, 1, 3).reshape(b * h, t, d)
+
+    kernel = functools.partial(
+        _kernel, causal=causal, window=window, block_q=block_q,
+        block_k=block_k, nk=nk, sm_scale=1.0 / np.sqrt(d))
+
+    from jax.experimental.pallas import tpu as pltpu
+    out = pl.pallas_call(
+        kernel,
+        grid=(b * h, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, block_q, d), lambda bh, qi, ki: (bh, qi, 0)),
+            pl.BlockSpec((1, block_k, d), lambda bh, qi, ki: (bh, ki, 0)),
+            pl.BlockSpec((1, block_k, d), lambda bh, qi, ki: (bh, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, d),
+                               lambda bh, qi, ki: (bh, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((b * h, s, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q,), jnp.float32),        # running max m
+            pltpu.VMEM((block_q,), jnp.float32),        # running sum l
+            pltpu.VMEM((block_q, d), jnp.float32),      # accumulator
+        ],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(qr, kr, vr)
+    return out.reshape(b, h, s, d).transpose(0, 2, 1, 3)

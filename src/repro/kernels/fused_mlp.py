@@ -1,0 +1,72 @@
+"""Fused Megatron MLP as a Pallas TPU kernel.
+
+The paper's §5.1 block — Z = (silu(X·Wg) ∘ (X·Wu))·Wd — fused so the
+(t, d_ff) gated intermediate NEVER round-trips to HBM: for each (row-block,
+ff-block) grid step we compute the gated partial in VMEM and immediately
+accumulate its down-projection into the fp32 output scratch. HBM traffic
+drops from 2·t·f (write+read the intermediate) to 0, which is exactly the
+memory-roofline motivation for fusing the column-parallel branch.
+
+Grid: (nm, nf) with nf sequential (accumulation); blocks are MXU-aligned
+(multiples of 128 in the lane dim).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(x_ref, wg_ref, wu_ref, wd_ref, o_ref, acc_ref, *, nf: int):
+    fi = pl.program_id(1)
+
+    @pl.when(fi == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    x = x_ref[...].astype(jnp.float32)            # (bm, d)
+    g = jax.lax.dot(x, wg_ref[...].astype(jnp.float32),
+                    preferred_element_type=jnp.float32)      # (bm, bf)
+    u = jax.lax.dot(x, wu_ref[...].astype(jnp.float32),
+                    preferred_element_type=jnp.float32)
+    h = (g * jax.lax.logistic(g)) * u             # silu(g) * u
+    acc_ref[...] += jax.lax.dot(h.astype(wd_ref.dtype),
+                                wd_ref[...],
+                                preferred_element_type=jnp.float32)
+
+    @pl.when(fi == nf - 1)
+    def _finalize():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_m", "block_f",
+                                             "interpret"))
+def fused_mlp(x, w_gate, w_up, w_down, *, block_m: int = 256,
+              block_f: int = 512, interpret: bool = False):
+    """x (T, d); w_gate/w_up (d, f); w_down (f, d) -> (T, d)."""
+    t, d = x.shape
+    f = w_gate.shape[1]
+    block_m = min(block_m, t)
+    block_f = min(block_f, f)
+    assert t % block_m == 0 and f % block_f == 0, (t, f, block_m, block_f)
+    nm, nf = t // block_m, f // block_f
+
+    return pl.pallas_call(
+        functools.partial(_kernel, nf=nf),
+        grid=(nm, nf),
+        in_specs=[
+            pl.BlockSpec((block_m, d), lambda mi, fi: (mi, 0)),
+            pl.BlockSpec((d, block_f), lambda mi, fi: (0, fi)),
+            pl.BlockSpec((d, block_f), lambda mi, fi: (0, fi)),
+            pl.BlockSpec((block_f, d), lambda mi, fi: (fi, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_m, d), lambda mi, fi: (mi, 0)),
+        out_shape=jax.ShapeDtypeStruct((t, d), x.dtype),
+        scratch_shapes=[pltpu.VMEM((block_m, d), jnp.float32)],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "arbitrary")),
+        interpret=interpret,
+    )(x, w_gate, w_up, w_down)

@@ -1,0 +1,87 @@
+"""jit'd wrappers around the Pallas kernels — the public ops API.
+
+On this CPU box the kernels run with interpret=True (Pallas executes the
+kernel body in Python); on a real TPU the same calls compile to Mosaic.
+``INTERPRET`` flips automatically based on the backend.
+"""
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.flash_attention import flash_attention as _flash
+from repro.kernels.fused_mlp import fused_mlp as _fused_mlp
+from repro.kernels.ssd_scan import ssd_scan as _ssd_scan
+
+INTERPRET = jax.default_backend() != "tpu"
+
+
+from functools import partial
+
+import jax.numpy as jnp
+import numpy as np
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6))
+def _flash_trainable(q, k, v, causal, window, block_q, block_k):
+    return _flash(q, k, v, causal=causal, window=window, block_q=block_q,
+                  block_k=block_k, interpret=INTERPRET)
+
+
+def _flash_fwd(q, k, v, causal, window, block_q, block_k):
+    out = _flash_trainable(q, k, v, causal, window, block_q, block_k)
+    return out, (q, k, v)
+
+
+def _flash_bwd(causal, window, block_q, block_k, res, g):
+    """Analytic backward via softmax recompute (pure jnp; on TPU this
+    would be a second Pallas kernel — the math is identical)."""
+    q, k, v = res
+    b, s, h, d = q.shape
+    t = k.shape[1]
+    s32 = jnp.einsum("bshd,bthd->bhst", q.astype(jnp.float32),
+                     k.astype(jnp.float32)) / np.sqrt(d)
+    qpos = jnp.arange(s)[:, None]
+    kpos = jnp.arange(t)[None, :]
+    mask = jnp.ones((s, t), bool)
+    if causal:
+        mask &= kpos <= qpos
+    if window > 0:
+        mask &= kpos > qpos - window
+    s32 = jnp.where(mask[None, None], s32, -1e30)
+    p = jax.nn.softmax(s32, axis=-1)                        # (B,H,S,T)
+    g32 = g.astype(jnp.float32)
+    dv = jnp.einsum("bhst,bshd->bthd", p, g32)
+    dp = jnp.einsum("bshd,bthd->bhst", g32, v.astype(jnp.float32))
+    dsoft = p * (dp - jnp.sum(dp * p, axis=-1, keepdims=True))
+    dsoft = dsoft / np.sqrt(d)
+    dq = jnp.einsum("bhst,bthd->bshd", dsoft, k.astype(jnp.float32))
+    dk = jnp.einsum("bhst,bshd->bthd", dsoft, q.astype(jnp.float32))
+    return dq.astype(q.dtype), dk.astype(k.dtype), dv.astype(v.dtype)
+
+
+_flash_trainable.defvjp(_flash_fwd, _flash_bwd)
+
+
+def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
+                    block_q: int = 128, block_k: int = 128):
+    """GQA-aware entry: repeats KV heads to match Q heads, then kernels.
+    Differentiable (custom VJP)."""
+    hq, hkv = q.shape[2], k.shape[2]
+    if hq != hkv:
+        rep = hq // hkv
+        k = jnp.repeat(k, rep, axis=2)
+        v = jnp.repeat(v, rep, axis=2)
+    return _flash_trainable(q, k, v, causal, window, block_q, block_k)
+
+
+def fused_mlp(x, w_gate, w_up, w_down, *, block_m: int = 256,
+              block_f: int = 512):
+    orig = x.shape
+    x2 = x.reshape(-1, orig[-1])
+    y = _fused_mlp(x2, w_gate, w_up, w_down, block_m=block_m,
+                   block_f=block_f, interpret=INTERPRET)
+    return y.reshape(orig)
+
+
+def ssd_scan(x, dt, A, B, C, *, chunk: int = 128):
+    return _ssd_scan(x, dt, A, B, C, chunk=chunk, interpret=INTERPRET)

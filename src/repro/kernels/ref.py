@@ -1,0 +1,56 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose targets)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def flash_attention_ref(q, k, v, *, causal: bool = True, window: int = 0):
+    """q (B,S,H,D), k/v (B,T,H,D) — MHA (callers pre-repeat GQA heads)."""
+    b, s, h, d = q.shape
+    t = k.shape[1]
+    scores = jnp.einsum("bshd,bthd->bhst", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) / np.sqrt(d)
+    qpos = jnp.arange(s)[:, None]
+    kpos = jnp.arange(t)[None, :]
+    mask = jnp.ones((s, t), bool)
+    if causal:
+        mask &= kpos <= qpos
+    if window > 0:
+        mask &= kpos > qpos - window
+    scores = jnp.where(mask[None, None], scores, -1e30)
+    p = jax.nn.softmax(scores, axis=-1)
+    return jnp.einsum("bhst,bthd->bshd", p,
+                      v.astype(jnp.float32)).astype(q.dtype)
+
+
+def fused_mlp_ref(x, w_gate, w_up, w_down):
+    """SwiGLU MLP: (silu(x@Wg) * (x@Wu)) @ Wd, fp32 accumulation."""
+    x32 = x.astype(jnp.float32)
+    g = jax.nn.silu(x32 @ w_gate.astype(jnp.float32))
+    u = x32 @ w_up.astype(jnp.float32)
+    return ((g * u) @ w_down.astype(jnp.float32)).astype(x.dtype)
+
+
+def ssd_scan_ref(x, dt, A, B, C, *, chunk: int = 0):
+    """Sequential (non-chunked) SSD recurrence — the ground truth.
+
+    x (b,s,h,p), dt (b,s,h), A (h,), B/C (b,s,n). Returns y (b,s,h,p).
+    """
+    b, s, h, p = x.shape
+    n = B.shape[-1]
+
+    def step(hstate, inp):
+        xt, dtt, bt, ct = inp              # (b,h,p), (b,h), (b,n), (b,n)
+        a = jnp.exp(dtt * A[None])         # (b,h)
+        upd = jnp.einsum("bh,bn,bhp->bhpn", dtt, bt.astype(jnp.float32),
+                         xt.astype(jnp.float32))
+        hstate = a[:, :, None, None] * hstate + upd
+        y = jnp.einsum("bn,bhpn->bhp", ct.astype(jnp.float32), hstate)
+        return hstate, y
+
+    h0 = jnp.zeros((b, h, p, n), jnp.float32)
+    _, ys = jax.lax.scan(step, h0, (x.swapaxes(0, 1), dt.swapaxes(0, 1),
+                                    B.swapaxes(0, 1), C.swapaxes(0, 1)))
+    return ys.swapaxes(0, 1).astype(x.dtype)

@@ -1,0 +1,97 @@
+"""Mamba2 SSD chunked scan as a Pallas TPU kernel.
+
+TPU adaptation of the SSD algorithm [arXiv:2405.21060] (DESIGN.md §3): one
+grid step per (batch*head, chunk); the chunk dimension is sequential and the
+running state (P x N, fp32) lives in VMEM scratch — the TPU analogue of the
+paper's inter-chunk recurrence held in registers/SMEM on GPU. Per chunk:
+
+  intra:  Y += (tril(C Bᵀ) ∘ decay) · (dt∘X)        (MXU matmuls, Q x Q)
+  inter:  Y += (C · h) ∘ exp(cum)                   (state from prev chunks)
+  state:  h  = exp(cum_last)·h + Σ_j exp(cum_last - cum_j) B_j (dt x)_j
+
+Single B/C group (G=1) as in the released models.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(x_ref, dt_ref, a_ref, b_ref, c_ref, o_ref, h_ref, *, q: int):
+    ci = pl.program_id(1)
+
+    @pl.when(ci == 0)
+    def _init():
+        h_ref[...] = jnp.zeros_like(h_ref)
+
+    x = x_ref[0].astype(jnp.float32)              # (Q, P)
+    dt = dt_ref[0].astype(jnp.float32)            # (Q,)
+    a = a_ref[0, 0]                               # scalar A_h (negative)
+    bmat = b_ref[0].astype(jnp.float32)           # (Q, N)
+    cmat = c_ref[0].astype(jnp.float32)           # (Q, N)
+
+    la = dt * a                                   # (Q,) log-decay per step
+    cum = jnp.cumsum(la)                          # (Q,) decay to t
+    xdt = x * dt[:, None]
+
+    # intra-chunk: scores (Q,Q) on the MXU, masked decay applied
+    scores = jax.lax.dot_general(cmat, bmat, (((1,), (1,)), ((), ())),
+                                 preferred_element_type=jnp.float32)
+    ii = jax.lax.broadcasted_iota(jnp.int32, (q, q), 0)
+    jj = jax.lax.broadcasted_iota(jnp.int32, (q, q), 1)
+    dec = jnp.where(ii >= jj, jnp.exp(cum[:, None] - cum[None, :]), 0.0)
+    y = jax.lax.dot(scores * dec, xdt,
+                    preferred_element_type=jnp.float32)      # (Q, P)
+
+    # inter-chunk: contribution of the carried state
+    h = h_ref[...]                                # (N, P)
+    y += jnp.exp(cum)[:, None] * jax.lax.dot(
+        cmat, h, preferred_element_type=jnp.float32)
+
+    # state update: h' = exp(cum_last) h + Σ_j exp(cum_last-cum_j) B_j xdt_j
+    wj = jnp.exp(cum[-1] - cum)                   # (Q,)
+    h_ref[...] = (jnp.exp(cum[-1]) * h
+                  + jax.lax.dot_general(bmat * wj[:, None], xdt,
+                                        (((0,), (0,)), ((), ())),
+                                        preferred_element_type=jnp.float32))
+    o_ref[0] = y.astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def ssd_scan(x, dt, A, B, C, *, chunk: int = 128, interpret: bool = False):
+    """x (b,s,h,p), dt (b,s,h) fp32, A (h,), B/C (b,s,n) -> y (b,s,h,p)."""
+    b, s, h, p = x.shape
+    n = B.shape[-1]
+    q = min(chunk, s)
+    assert s % q == 0
+    nc = s // q
+
+    # (BH, nc... ) layout: head-major so each grid row owns one (batch, head)
+    xr = x.transpose(0, 2, 1, 3).reshape(b * h, s, p)
+    dtr = dt.transpose(0, 2, 1).reshape(b * h, s)
+    ar = jnp.broadcast_to(A[None, :], (b, h)).reshape(b * h, 1)
+    br = jnp.broadcast_to(B[:, None], (b, h, s, n)).reshape(b * h, s, n)
+    cr = jnp.broadcast_to(C[:, None], (b, h, s, n)).reshape(b * h, s, n)
+
+    out = pl.pallas_call(
+        functools.partial(_kernel, q=q),
+        grid=(b * h, nc),
+        in_specs=[
+            pl.BlockSpec((1, q, p), lambda bh, ci: (bh, ci, 0)),
+            pl.BlockSpec((1, q), lambda bh, ci: (bh, ci)),
+            pl.BlockSpec((1, 1), lambda bh, ci: (bh, 0)),
+            pl.BlockSpec((1, q, n), lambda bh, ci: (bh, ci, 0)),
+            pl.BlockSpec((1, q, n), lambda bh, ci: (bh, ci, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, q, p), lambda bh, ci: (bh, ci, 0)),
+        out_shape=jax.ShapeDtypeStruct((b * h, s, p), x.dtype),
+        scratch_shapes=[pltpu.VMEM((n, p), jnp.float32)],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "arbitrary")),
+        interpret=interpret,
+    )(xr, dtr, ar, br, cr)
+    return out.reshape(b, h, s, p).transpose(0, 2, 1, 3)

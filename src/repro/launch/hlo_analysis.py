@@ -1,0 +1,321 @@
+"""Loop-aware HLO analysis.
+
+``compiled.cost_analysis()`` counts a while-loop body ONCE, which makes it
+useless for scan-over-layers programs (a 62-layer model reports ~1 layer of
+FLOPs). This module parses ``compiled.as_text()`` into computations, counts
+dot FLOPs / buffer bytes / collective bytes per computation, and propagates
+multipliers along the call graph using the ``known_trip_count`` backend
+config XLA attaches to scan-derived while loops.
+
+Outputs feed launch/roofline.py. Counting rules:
+  * FLOPs: dot ops: 2 * prod(result dims) * K  (K = contracted size);
+    elementwise ops are ignored (matmul-dominated workloads).
+  * bytes: every op's RESULT bytes once (proxy for HBM writes) plus
+    operand bytes for dot/gather/scatter/collectives (proxy for reads);
+    intra-fusion ops are skipped (they never hit HBM).
+  * collective bytes: result bytes of all-gather/all-reduce/reduce-scatter/
+    all-to-all/collective-permute ops, split by whether the replica group
+    crosses the "pod" axis (DCN) or not (ICI).
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "bf16": 2, "f16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8,
+    "f64": 8, "c64": 8, "c128": 16, "token": 0, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([\d,]*)\]")
+COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+
+def parse_shape(txt: str) -> Tuple[Optional[str], Tuple[int, ...]]:
+    m = _SHAPE_RE.search(txt)
+    if not m or m.group(1) not in _DTYPE_BYTES:
+        return None, ()
+    dims = tuple(int(d) for d in m.group(2).split(",") if d)
+    return m.group(1), dims
+
+
+def shape_bytes(txt: str) -> int:
+    """Total bytes over every dtype[shape] group in a (possibly tuple)
+    type string."""
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(txt):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+@dataclass
+class Op:
+    name: str
+    opcode: str
+    result_type: str
+    operands: List[str]
+    attrs: str
+    is_root: bool = False
+
+    def result_bytes(self) -> int:
+        return shape_bytes(self.result_type)
+
+
+@dataclass
+class Computation:
+    name: str
+    ops: List[Op] = field(default_factory=list)
+    symbols: Dict[str, str] = field(default_factory=dict)  # op name -> type
+    calls: List[Tuple[str, float]] = field(default_factory=list)
+    is_fusion_body: bool = False
+
+    def flops(self) -> float:
+        total = 0.0
+        for op in self.ops:
+            if op.opcode not in ("dot", "convolution"):
+                continue
+            _, rdims = parse_shape(op.result_type)
+            rn = 1
+            for d in rdims:
+                rn *= d
+            k = 1
+            m = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", op.attrs)
+            if m and op.operands:
+                lhs_t = self.symbols.get(op.operands[0], "")
+                _, ldims = parse_shape(lhs_t)
+                for ci in m.group(1).split(","):
+                    if ci and int(ci) < len(ldims):
+                        k *= ldims[int(ci)]
+            total += 2.0 * rn * k
+        return total
+
+    def bytes_accessed(self, dus_map=None) -> float:
+        if self.is_fusion_body:
+            return 0.0
+        dus_map = dus_map or {}
+        total = 0.0
+        for op in self.ops:
+            # control-flow results are aliases of their body outputs (already
+            # counted inside the body x trip count); tuples/gte are free.
+            if op.opcode in ("parameter", "constant", "tuple",
+                             "get-tuple-element", "bitcast", "while",
+                             "conditional", "call", "custom-call"):
+                continue
+            if op.opcode in ("fusion", "dynamic-update-slice"):
+                # in-place DUS: XLA aliases output to the big operand and
+                # writes only the update slice — charge the slice, not the
+                # whole buffer (scan ys / cache writes would otherwise be
+                # overcounted by O(depth)).
+                upd = None
+                if op.opcode == "dynamic-update-slice" and len(op.operands) > 1:
+                    upd = shape_bytes(self.symbols.get(op.operands[1], ""))
+                else:
+                    for callee in re.findall(r"calls=%?([\w.\-]+)", op.attrs):
+                        if callee in dus_map:
+                            upd = dus_map[callee]
+                            break
+                if upd is not None and upd > 0:
+                    total += 2 * upd          # read slice env + write slice
+                    continue
+            total += op.result_bytes()
+            if op.opcode in ("dot", "gather", "scatter", "fusion",
+                             *COLLECTIVES):
+                for o in op.operands:
+                    total += shape_bytes(self.symbols.get(o, ""))
+        return total
+
+    def collective_bytes(self) -> Dict[str, float]:
+        out: Dict[str, float] = defaultdict(float)
+        for op in self.ops:
+            if op.opcode in COLLECTIVES:
+                cross_pod = _crosses_pod(op.attrs)
+                key = op.opcode + ("@dcn" if cross_pod else "")
+                out[key] += op.result_bytes()
+        return dict(out)
+
+
+def _crosses_pod(attrs: str) -> bool:
+    """Heuristic: a replica group spanning devices >= 256 apart crosses the
+    pod axis of the (2,16,16) mesh (pods are the slowest-varying axis)."""
+    m = re.search(r"replica_groups=\{(\{[^}]*\}(?:,\{[^}]*\})*)\}", attrs)
+    if not m:
+        m2 = re.search(r"replica_groups=\[\d+,\d+\]<=\[(\d+)\]", attrs)
+        if m2:
+            return False  # iota groups along minor axes
+        return False
+    first = m.group(1).split("}")[0].strip("{")
+    ids = [int(x) for x in first.split(",") if x.strip()]
+    return bool(ids) and (max(ids) - min(ids)) >= 256
+
+
+_COMP_HDR = re.compile(r"^(ENTRY\s+)?%?([\w.\-]+)\s*\(.*\{$")
+_OP_HDR = re.compile(r"^(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*")
+_SIMPLE_TYPE = re.compile(r"^([a-z0-9]+\[[^\]]*\](?:\{[^}]*\})?)\s*")
+_OPCODE = re.compile(r"^([\w\-]+)\(")
+
+
+def _parse_op_line(line: str):
+    """Parse '%name = TYPE opcode(operands), attrs'. Tuple types may embed
+    /*index=N*/ comments, so the type is paren-walked, not regexed."""
+    m = _OP_HDR.match(line)
+    if not m:
+        return None
+    name = m.group(1)
+    rest = line[m.end():]
+    if rest.startswith("("):
+        depth = 0
+        for i, ch in enumerate(rest):
+            if ch == "(":
+                depth += 1
+            elif ch == ")":
+                depth -= 1
+                if depth == 0:
+                    break
+        else:
+            return None
+        rtype, rest = rest[:i + 1], rest[i + 1:].lstrip()
+    else:
+        tm = _SIMPLE_TYPE.match(rest)
+        if not tm:
+            return None
+        rtype, rest = tm.group(1), rest[tm.end():]
+    om = _OPCODE.match(rest)
+    if not om:
+        return None
+    opcode = om.group(1)
+    rest = rest[om.end():]
+    depth = 1
+    idx = len(rest)
+    for idx, ch in enumerate(rest):
+        if ch == "(":
+            depth += 1
+        elif ch == ")":
+            depth -= 1
+            if depth == 0:
+                break
+    operand_txt, attrs = rest[:idx], rest[idx + 1:]
+    operands = [o.strip().lstrip("%") for o in operand_txt.split(",")
+                if o.strip().startswith("%")]
+    # inline-typed operands: "f32[8]{0} %foo" — grab trailing %name tokens
+    if not operands:
+        operands = [t.lstrip("%") for t in
+                    re.findall(r"%([\w.\-]+)", operand_txt)]
+    return name, rtype, opcode, operands, attrs
+_TRIP_RE = re.compile(r'known_trip_count"?\s*[:=]\s*\{"?n"?\s*:\s*"?(\d+)"?\}')
+# callee lists: key=%name  or  key={%a, %b}; continuation items REQUIRE the
+# leading % so we never swallow the following attribute (e.g. metadata=).
+_CALL_RE = re.compile(
+    r"(?:condition|body|to_apply|calls|branch_computations|"
+    r"true_computation|false_computation)="
+    r"(\{[^}]*\}|%?[\w.\-]+)")
+
+
+def parse_module(txt: str) -> Tuple[Dict[str, Computation], Optional[str]]:
+    comps: Dict[str, Computation] = {}
+    cur: Optional[Computation] = None
+    entry: Optional[str] = None
+    for raw in txt.splitlines():
+        line = raw.strip()
+        if not line or line.startswith("//"):
+            continue
+        if cur is None:
+            m = _COMP_HDR.match(line)
+            if m:
+                cur = Computation(m.group(2))
+                if m.group(1):
+                    entry = m.group(2)
+                if "fused_computation" in m.group(2) or \
+                        m.group(2).startswith("fused."):
+                    cur.is_fusion_body = True
+                comps[cur.name] = cur
+            continue
+        if line == "}":
+            cur = None
+            continue
+        parsed = _parse_op_line(line)
+        if parsed is None:
+            continue
+        name, rtype, opcode, operands, attrs = parsed
+        op = Op(name, opcode, rtype, operands, attrs,
+                is_root=line.startswith("ROOT "))
+        cur.ops.append(op)
+        cur.symbols[name] = rtype
+        # call edges with multipliers
+        mult = 1.0
+        if opcode == "while":
+            tm = _TRIP_RE.search(attrs)
+            mult = float(tm.group(1)) if tm else 1.0
+        for cm in _CALL_RE.finditer(attrs):
+            blob = cm.group(1)
+            for callee in re.findall(r"%?([\w.\-]+)", blob):
+                if callee:
+                    cur.calls.append((callee, mult))
+    return comps, entry
+
+
+@dataclass
+class HloSummary:
+    flops: float
+    bytes_accessed: float
+    collectives: Dict[str, float]
+    collective_bytes_ici: float
+    collective_bytes_dcn: float
+    num_while: int
+
+
+def analyze(txt: str) -> HloSummary:
+    comps, entry = parse_module(txt)
+    if entry is None:
+        entry = next(iter(comps))
+    mult: Dict[str, float] = defaultdict(float)
+
+    def visit(name: str, m: float, seen):
+        if name not in comps or name in seen:
+            return
+        mult[name] += m
+        for callee, cm in comps[name].calls:
+            visit(callee, m * cm, seen | {name})
+
+    visit(entry, 1.0, frozenset())
+
+    # fusion bodies rooted at dynamic-update-slice are in-place: map callee
+    # name -> update-operand bytes
+    dus_map = {}
+    for name, comp in comps.items():
+        if not comp.is_fusion_body:
+            continue
+        roots = [op for op in comp.ops if op.is_root]
+        if roots and roots[-1].opcode == "dynamic-update-slice":
+            r = roots[-1]
+            if len(r.operands) > 1:
+                dus_map[name] = shape_bytes(comp.symbols.get(r.operands[1],
+                                                             ""))
+
+    flops = 0.0
+    byts = 0.0
+    colls: Dict[str, float] = defaultdict(float)
+    n_while = 0
+    for name, comp in comps.items():
+        m = mult.get(name, 0.0)
+        if m == 0.0:
+            continue
+        flops += m * comp.flops()
+        byts += m * comp.bytes_accessed(dus_map)
+        for k, v in comp.collective_bytes().items():
+            colls[k] += m * v
+        n_while += sum(1 for op in comp.ops if op.opcode == "while")
+    ici = sum(v for k, v in colls.items() if not k.endswith("@dcn"))
+    dcn = sum(v for k, v in colls.items() if k.endswith("@dcn"))
+    return HloSummary(flops=flops, bytes_accessed=byts,
+                      collectives=dict(colls), collective_bytes_ici=ici,
+                      collective_bytes_dcn=dcn, num_while=n_while)

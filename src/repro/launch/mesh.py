@@ -1,0 +1,37 @@
+"""Production meshes. Functions, not module constants — importing this
+module never touches jax device state."""
+from __future__ import annotations
+
+import jax
+
+
+def _mk(shape, axes):
+    return jax.make_mesh(shape, axes,
+                         axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16x16 = 256 chips/pod ("data","model"); multi_pod adds a 2-pod axis.
+
+    The axis roles follow the paper's case-studies: intra-operator (tensor)
+    parallelism on the fast innermost "model" axis, data parallelism on
+    "data", and pods connected by DCN carry only data parallelism
+    (PaLM §5.3: 2x data parallel across pods, no inter-layer parallelism).
+    """
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return _mk(shape, axes)
+
+
+def make_host_mesh(*, model: int = 1, data: int = 0):
+    """Small mesh over the locally available devices (tests/examples)."""
+    n = len(jax.devices())
+    if data == 0:
+        data = n // model
+    return _mk((data, model), ("data", "model"))
+
+
+def make_pipeline_mesh(*, data: int, pipe: int, model: int):
+    """Mesh with an explicit inter-operator ("pipe") axis for
+    core/pipeline.py — the survey's hybrid dp x pp x tp layout (Table 2)."""
+    return _mk((data, pipe, model), ("data", "pipe", "model"))

@@ -1,0 +1,137 @@
+"""Roofline-term extraction from a compiled dry-run (deliverable g).
+
+    compute    = HLO_FLOPs   / (chips * PEAK_FLOPS)
+    memory     = HLO_bytes   / (chips * HBM_BW)
+    collective = ici_bytes/dev / (ICI_BW * LINKS)  +  dcn_bytes/dev / DCN_BW
+
+FLOPs / bytes / collective bytes come from launch/hlo_analysis.py — a
+loop-aware parse of ``compiled.as_text()`` (XLA's ``cost_analysis()``
+counts scan bodies once; see hlo_analysis docstring). The post-SPMD HLO is
+the PER-DEVICE program, so globals are per-device values x chips.
+``cost_analysis()`` raw numbers are kept for cross-reference.
+
+Hardware constants: TPU v5e — 197 TFLOP/s bf16, 819 GB/s HBM,
+~50 GB/s/link ICI (2 usable links per axis-collective), 25 GB/s/chip DCN.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, Optional
+
+from repro.launch import hlo_analysis as ha
+
+PEAK_FLOPS = 197e12          # bf16 / chip
+HBM_BW = 819e9               # bytes/s / chip
+ICI_BW = 50e9                # bytes/s / link
+ICI_LINKS = 2                # usable links per chip for a 1-axis collective
+DCN_BW = 25e9                # bytes/s / chip across pods
+
+
+@dataclass
+class Roofline:
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    hlo_flops: float             # global (= per-device x chips)
+    hlo_bytes: float             # global
+    coll_ici_dev: float          # bytes per device over ICI
+    coll_dcn_dev: float          # bytes per device over DCN
+    model_flops: float
+    coll_detail: Dict[str, float] = field(default_factory=dict)
+    mem_per_device: float = 0.0
+    xla_cost_analysis: Dict[str, float] = field(default_factory=dict)
+
+    @property
+    def t_compute(self) -> float:
+        return self.hlo_flops / (self.chips * PEAK_FLOPS)
+
+    @property
+    def t_memory(self) -> float:
+        return self.hlo_bytes / (self.chips * HBM_BW)
+
+    @property
+    def t_collective(self) -> float:
+        return (self.coll_ici_dev / (ICI_BW * ICI_LINKS)
+                + self.coll_dcn_dev / DCN_BW)
+
+    @property
+    def bottleneck(self) -> str:
+        terms = {"compute": self.t_compute, "memory": self.t_memory,
+                 "collective": self.t_collective}
+        return max(terms, key=terms.get)
+
+    @property
+    def useful_ratio(self) -> float:
+        return self.model_flops / self.hlo_flops if self.hlo_flops else 0.0
+
+    @property
+    def step_time_lower_bound(self) -> float:
+        """max of the three terms = perfectly-overlapped step time."""
+        return max(self.t_compute, self.t_memory, self.t_collective)
+
+    @property
+    def mfu_upper_bound(self) -> float:
+        t = self.step_time_lower_bound
+        if t == 0:
+            return 0.0
+        return self.model_flops / (self.chips * PEAK_FLOPS * t)
+
+    def row(self) -> dict:
+        return {
+            "arch": self.arch, "shape": self.shape, "mesh": self.mesh,
+            "chips": self.chips,
+            "hlo_flops": self.hlo_flops, "hlo_bytes": self.hlo_bytes,
+            "coll_ici_bytes_per_dev": self.coll_ici_dev,
+            "coll_dcn_bytes_per_dev": self.coll_dcn_dev,
+            "t_compute_s": self.t_compute, "t_memory_s": self.t_memory,
+            "t_collective_s": self.t_collective,
+            "bottleneck": self.bottleneck,
+            "model_flops": self.model_flops,
+            "useful_ratio": self.useful_ratio,
+            "mfu_upper_bound": self.mfu_upper_bound,
+            "mem_per_device_gb": self.mem_per_device / 1e9,
+            "coll_detail": self.coll_detail,
+            "xla_cost_analysis": self.xla_cost_analysis,
+        }
+
+
+def model_flops_train(cfg, tokens: int) -> float:
+    """6·N·D (dense) / 6·N_active·D (MoE) — the MFU numerator (paper §6)."""
+    return 6.0 * cfg.active_param_count() * tokens
+
+
+def model_flops_decode(cfg, tokens: int) -> float:
+    return 2.0 * cfg.active_param_count() * tokens
+
+
+def extract(compiled, *, arch: str, shape: str, mesh_name: str, chips: int,
+            model_flops: float) -> Roofline:
+    txt = compiled.as_text()
+    summary = ha.analyze(txt)
+    try:
+        cost = compiled.cost_analysis()
+        if isinstance(cost, list):
+            cost = cost[0]
+        xla_cost = {"flops": float(cost.get("flops", 0.0)),
+                    "bytes accessed": float(cost.get("bytes accessed", 0.0))}
+    except Exception:
+        xla_cost = {}
+    try:
+        mem = compiled.memory_analysis()
+        per_dev = (getattr(mem, "temp_size_in_bytes", 0)
+                   + getattr(mem, "argument_size_in_bytes", 0)
+                   + getattr(mem, "output_size_in_bytes", 0)
+                   - getattr(mem, "alias_size_in_bytes", 0))
+    except Exception:
+        per_dev = 0
+    return Roofline(
+        arch=arch, shape=shape, mesh=mesh_name, chips=chips,
+        hlo_flops=summary.flops * chips,
+        hlo_bytes=summary.bytes_accessed * chips,
+        coll_ici_dev=summary.collective_bytes_ici,
+        coll_dcn_dev=summary.collective_bytes_dcn,
+        model_flops=model_flops,
+        coll_detail=summary.collectives,
+        mem_per_device=per_dev,
+        xla_cost_analysis=xla_cost)

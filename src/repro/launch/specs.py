@@ -1,0 +1,108 @@
+"""ShapeDtypeStruct stand-ins + shardings for every model input — the
+no-allocation inputs the dry-run lowers against (deliverable e)."""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.core import sharding as shd
+from repro.core.strategy import Strategy
+from repro.models import get_model
+from repro.serve.step import make_decode_step, make_prefill_step
+from repro.train.step import init_opt_state, make_train_step
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def batch_specs(cfg: ModelConfig, batch: int, seq: int) -> Dict[str, Any]:
+    out = {"tokens": _sds((batch, seq), jnp.int32)}
+    if cfg.has_encoder:
+        out["frames"] = _sds((batch, cfg.encoder_ctx, cfg.d_model),
+                             jnp.float32)
+    if cfg.cross_attn_every > 0:
+        out["image_embeds"] = _sds((batch, cfg.num_image_tokens, cfg.d_model),
+                                   jnp.float32)
+    return out
+
+
+def batch_shardings(cfg, batch: int, mesh: Mesh, strategy: Strategy):
+    rules = strategy.rules(mesh)
+    dp = 1
+    for a in ("pod", "data"):
+        if a in mesh.axis_names:
+            dp *= mesh.shape[a]
+    bspec = rules["batch"] if batch % dp == 0 else None
+    out = {"tokens": NamedSharding(mesh, P(bspec, None))}
+    if cfg.has_encoder:
+        out["frames"] = NamedSharding(mesh, P(bspec, None, None))
+    if cfg.cross_attn_every > 0:
+        out["image_embeds"] = NamedSharding(mesh, P(bspec, None, None))
+    return out
+
+
+def abstract_params(cfg: ModelConfig):
+    model = get_model(cfg)
+    return jax.eval_shape(lambda: model.init(jax.random.key(0), cfg))
+
+
+def abstract_opt_state(cfg: ModelConfig, strategy: Strategy):
+    params = abstract_params(cfg)
+    return jax.eval_shape(lambda p: init_opt_state(p, strategy), params)
+
+
+def abstract_cache(cfg: ModelConfig, batch: int, max_len: int):
+    model = get_model(cfg)
+    return jax.eval_shape(
+        lambda: model.init_cache(cfg, batch, max_len))
+
+
+def train_specs(cfg, shape: ShapeConfig, mesh: Mesh, strategy: Strategy):
+    """(args, in_shardings) for train_step(params, opt_state, batch)."""
+    params = abstract_params(cfg)
+    opt = abstract_opt_state(cfg, strategy)
+    batch = batch_specs(cfg, shape.global_batch, shape.seq_len)
+    psh = jax.tree.map(lambda s: NamedSharding(mesh, s),
+                       shd.param_pspecs(params, strategy, mesh))
+    osh = jax.tree.map(lambda s: NamedSharding(mesh, s),
+                       shd.opt_state_pspecs(opt, params, strategy, mesh))
+    bsh = batch_shardings(cfg, shape.global_batch, mesh, strategy)
+    return (params, opt, batch), (psh, osh, bsh)
+
+
+def prefill_specs(cfg, shape: ShapeConfig, mesh: Mesh, strategy: Strategy):
+    params = abstract_params(cfg)
+    batch = batch_specs(cfg, shape.global_batch, shape.seq_len)
+    psh = jax.tree.map(lambda s: NamedSharding(mesh, s),
+                       shd.param_pspecs(params, strategy, mesh))
+    bsh = batch_shardings(cfg, shape.global_batch, mesh, strategy)
+    return (params, batch), (psh, bsh)
+
+
+def decode_specs(cfg, shape: ShapeConfig, mesh: Mesh, strategy: Strategy):
+    """(args, shardings) for serve_step(params, cache, token, pos) — one new
+    token with a KV/SSM cache of seq_len."""
+    params = abstract_params(cfg)
+    cache = abstract_cache(cfg, shape.global_batch, shape.seq_len)
+    token = _sds((shape.global_batch, 1), jnp.int32)
+    pos = _sds((), jnp.int32)
+    psh = jax.tree.map(lambda s: NamedSharding(mesh, s),
+                       shd.param_pspecs(params, strategy, mesh))
+    csh = jax.tree.map(lambda s: NamedSharding(mesh, s),
+                       shd.cache_pspecs(cache, strategy, mesh,
+                                        shape.global_batch))
+    rules = strategy.rules(mesh)
+    dp = 1
+    for a in ("pod", "data"):
+        if a in mesh.axis_names:
+            dp *= mesh.shape[a]
+    bspec = rules["batch"] if shape.global_batch % dp == 0 else None
+    tsh = NamedSharding(mesh, P(bspec, None))
+    possh = NamedSharding(mesh, P())
+    return (params, cache, token, pos), (psh, csh, tsh, possh)

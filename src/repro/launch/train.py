@@ -1,0 +1,64 @@
+"""Training launcher: ``--arch`` x strategy on the local (or forced-count)
+device mesh. For the production 256/512-chip meshes use dryrun.py; this
+driver actually executes steps (reduced config by default, since the box
+is CPU).
+
+    PYTHONPATH=src python -m repro.launch.train --arch qwen3-14b \
+        --steps 50 --smoke                        # reduced variant, runs
+    PYTHONPATH=src python -m repro.launch.train --arch minitron-4b --plan
+"""
+from __future__ import annotations
+
+import argparse
+
+from repro.configs import ARCH_NAMES, SHAPES, get_config, get_smoke
+from repro.core.planner import plan
+from repro.core.strategy import Strategy
+from repro.launch.mesh import make_host_mesh
+from repro.train.trainer import TrainConfig, Trainer
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCH_NAMES, required=True)
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--global-batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--smoke", action="store_true",
+                    help="use the reduced per-arch smoke config (default on "
+                         "CPU; full configs are dry-run only)")
+    ap.add_argument("--plan", action="store_true",
+                    help="print the planner's production-mesh strategy and "
+                         "exit")
+    ap.add_argument("--seq-parallel", action="store_true")
+    ap.add_argument("--fsdp", action="store_true")
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--checkpoint-dir", default="")
+    args = ap.parse_args()
+
+    if args.plan:
+        cfg = get_config(args.arch)
+        p = plan(cfg, SHAPES["train_4k"], 256, method="dp")
+        d = p.degrees
+        print(f"{args.arch}: dp{d.dp} tp{d.tp} pp{d.pp} "
+              f"micro{d.microbatches}{' sp' if d.seq_parallel else ''} "
+              f"-> est {p.cost:.3f}s/step, MFU {p.mfu:.1%}, fits={p.fits}")
+        return
+
+    cfg = get_smoke(args.arch).with_(dtype="float32")
+    strategy = Strategy(remat=False, microbatches=args.microbatches,
+                        seq_parallel=args.seq_parallel, fsdp=args.fsdp,
+                        dtype="float32")
+    mesh = make_host_mesh(model=1)
+    tc = TrainConfig(steps=args.steps, lr=args.lr, log_every=10,
+                     checkpoint_every=args.steps if args.checkpoint_dir
+                     else 0,
+                     checkpoint_dir=args.checkpoint_dir or "checkpoints")
+    tr = Trainer(cfg, strategy, mesh, tc, global_batch=args.global_batch,
+                 seq_len=args.seq)
+    tr.run()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,31 @@
+"""Model zoo. ``get_model(cfg)`` returns the family module implementing the
+shared API: init / forward / init_cache / prefill / decode_step."""
+from __future__ import annotations
+
+from repro.configs.base import ModelConfig
+
+
+def get_model(cfg: ModelConfig):
+    from repro.models import encdec, hybrid, mamba_lm, transformer, vlm
+    return {
+        "dense": transformer,
+        "moe": transformer,
+        "ssm": mamba_lm,
+        "hybrid": hybrid,
+        "audio": encdec,
+        "vlm": vlm,
+    }[cfg.arch_type]
+
+
+def make_batch_shapes(cfg: ModelConfig, batch: int, seq: int) -> dict:
+    """Abstract shapes of a training/prefill batch (see launch/specs.py for
+    the ShapeDtypeStruct version)."""
+    import numpy as np
+    shapes = {"tokens": ((batch, seq), np.int32)}
+    if cfg.has_encoder:
+        shapes["frames"] = ((batch, cfg.encoder_ctx, cfg.d_model),
+                            np.float32)
+    if cfg.cross_attn_every > 0:
+        shapes["image_embeds"] = ((batch, cfg.num_image_tokens, cfg.d_model),
+                                  np.float32)
+    return shapes

@@ -1,0 +1,121 @@
+"""Context-parallel decode attention (beyond-paper optimisation, §Perf).
+
+Problem (measured in the baseline dry-run): for GQA archs whose kv_heads
+don't divide the "model" axis (deepseek/qwen/internlm/minitron/kimi/vlm:
+kv=8 on a 16-way axis), the decode cache must shard on the SEQUENCE dim.
+GSPMD then resolves `dynamic_update_slice` (cache write at `pos`) and the
+softmax over the sharded seq by ALL-GATHERING the whole cache in fp32 —
+4 gathers + 2 permutes of (B, 32768, 8, 128) PER LAYER PER TOKEN
+(~0.38 TB/device/token on deepseek-33b decode_32k).
+
+Fix: express the attention shard-locally with `shard_map`:
+  * the owning shard writes the new K/V row (predicated local update);
+  * each shard computes partial (m, l, o) online-softmax stats over its
+    seq slice;
+  * stats combine with one tiny psum/pmax: bytes moved per layer drop from
+    O(B·S·Hkv·D) to O(B·Hq·D) — ~5 orders of magnitude at S=32k.
+
+This is the TPU-idiomatic "context parallelism" used by long-context
+serving systems; the survey's taxonomy calls it intra-operator parallelism
+on the attribute (sequence) dimension.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.core import pspec as _pspec
+
+
+def cp_available(cache_k) -> bool:
+    """CP decode applies when a mesh+rules context is active and the cache
+    seq dim divides the model axis."""
+    mesh = _pspec._mesh()
+    if mesh is None or "model" not in mesh.axis_names:
+        return False
+    return cache_k.shape[1] % mesh.shape["model"] == 0
+
+
+def _local_attn_stats(q, k, v, kpos, pos, window, n_rep):
+    """Partial online-softmax stats over the local seq slice.
+    q (B,1,Hq,D); k/v (B,Sl,Hkv,D); kpos (Sl,). Returns m,l,o (fp32)."""
+    b, _, hq, d = q.shape
+    # grouped-query einsum: avoids BOTH the repeated-KV materialisation and
+    # fp32 copies of the cache (fp32 only in the MXU accumulator).
+    g = hq // max(n_rep, 1)                                  # = hkv
+    qg = q.reshape(b, 1, g, n_rep, d)
+    s = jnp.einsum("bqgrd,btgd->bgrqt", qg, k,
+                   preferred_element_type=jnp.float32) / np.sqrt(d)
+    mask = (kpos <= pos) & (kpos >= 0)
+    if window > 0:
+        mask &= kpos > pos - window
+    s = jnp.where(mask[None, None, None, None, :], s, -1e30)
+    m = s.max(-1)                                            # (B,g,r,1)
+    p = jnp.exp(s - m[..., None])
+    l = p.sum(-1)
+    o = jnp.einsum("bgrqt,btgd->bgrqd", p, v,
+                   preferred_element_type=jnp.float32)
+    bq = 1
+    return (m.reshape(b, hq, bq), l.reshape(b, hq, bq),
+            o.reshape(b, hq, bq, d))
+
+
+def cp_decode_attention(q, kv, k_new, v_new, pos, *, window: int = 0,
+                        axis: str = "model"):
+    """Sharded decode attention + cache write, all shard-local.
+
+    q (B,1,Hq,D) replicated over `axis`; kv {"k","v"} (B,S,Hkv,D) sharded
+    on dim 1 over `axis`; k_new/v_new (B,1,Hkv,D) replicated; pos scalar.
+    Returns ctx (B,1,Hq,D) and the updated cache dict.
+    """
+    mesh = _pspec._mesh()
+    assert mesh is not None
+    n_shard = mesh.shape[axis]
+    b, s_total, hkv, d = kv["k"].shape
+    hq = q.shape[2]
+    n_rep = hq // hkv
+    s_local = s_total // n_shard
+    # keep the data-parallel batch sharding inside the shard_map specs —
+    # otherwise shard_map would all-gather the batch over "data".
+    rules = _pspec._rules() or {}
+    batch_ax = rules.get("batch")
+    if batch_ax is not None:
+        dp = 1
+        for a in (batch_ax if isinstance(batch_ax, tuple) else (batch_ax,)):
+            dp *= mesh.shape[a]
+        if b % dp != 0:
+            batch_ax = None
+
+    def body(q, k_c, v_c, kn, vn, pos):
+        i = jax.lax.axis_index(axis)
+        start = i * s_local
+        owns = jnp.logical_and(pos >= start, pos < start + s_local)
+        li = jnp.clip(pos - start, 0, s_local - 1)
+        row_k = jnp.where(owns, kn[:, 0], k_c[:, li])
+        row_v = jnp.where(owns, vn[:, 0], v_c[:, li])
+        k_c = jax.lax.dynamic_update_index_in_dim(k_c, row_k, li, 1)
+        v_c = jax.lax.dynamic_update_index_in_dim(v_c, row_v, li, 1)
+        kpos = start + jnp.arange(s_local)
+        m, l, o = _local_attn_stats(q, k_c, v_c, kpos, pos, window, n_rep)
+        m_g = jax.lax.pmax(m, axis)
+        corr = jnp.exp(m - m_g)
+        l_g = jax.lax.psum(l * corr, axis)
+        o_g = jax.lax.psum(o * corr[..., None], axis)
+        safe = jnp.where(l_g == 0.0, 1.0, l_g)
+        ctx = (o_g / safe[..., None]).astype(q.dtype)        # (B,H,1,D)
+        return ctx.transpose(0, 2, 1, 3), k_c, v_c
+
+    spec_kv = P(batch_ax, axis, None, None)
+    rep4 = P(batch_ax, None, None, None)
+    ctx, k2, v2 = jax.shard_map(
+        body, mesh=mesh,
+        in_specs=(rep4, spec_kv, spec_kv, rep4, rep4, P()),
+        out_specs=(rep4, spec_kv, spec_kv),
+        check_vma=False,
+    )(q, kv["k"], kv["v"], k_new, v_new, pos)
+    return ctx, {"k": k2, "v": v2}

@@ -1,0 +1,204 @@
+"""Zamba2-style hybrid: Mamba2 backbone + a SHARED full-attention block
+applied every ``hybrid_attn_every`` mamba layers [arXiv:2411.15242].
+
+The shared block's WEIGHTS are shared across its applications; each
+application keeps its own KV cache. Structure:
+
+    G = num_layers // hybrid_attn_every groups of
+        [every x (norm -> mamba)] -> shared (norm -> attn -> norm -> mlp)
+    + (num_layers % every) trailing mamba layers.
+
+At long_500k the shared attention runs with a sliding window (ring cache)
+so total decode state stays O(G * (window + ssm_state)) — sub-quadratic.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.pspec import constrain
+from repro.models import kvcache, ssm
+from repro.models.layers import (attention, attn_out, attn_qkv, dense_init,
+                                 init_attn, init_mlp, mlp, rmsnorm)
+from repro.models.mamba_lm import init_layer as init_mamba_layer
+from repro.models.transformer import cache_window
+
+
+def _gl(cfg):
+    g = cfg.num_layers // cfg.hybrid_attn_every
+    rest = cfg.num_layers - g * cfg.hybrid_attn_every
+    return g, rest
+
+
+def init(key, cfg):
+    ke, kg, kr, ks_, kh = jax.random.split(key, 5)
+    g, rest = _gl(cfg)
+    grouped = jax.vmap(jax.vmap(lambda k: init_mamba_layer(k, cfg)))(
+        jax.random.split(kg, (g, cfg.hybrid_attn_every)))
+    trailing = jax.vmap(lambda k: init_mamba_layer(k, cfg))(
+        jax.random.split(kr, max(rest, 1)))
+    ka, km = jax.random.split(ks_)
+    shared = {"attn": init_attn(ka, cfg),
+              "mlp": init_mlp(km, cfg),
+              "ln1": jnp.ones((cfg.d_model,), jnp.float32),
+              "ln2": jnp.ones((cfg.d_model,), jnp.float32)}
+    return {
+        "embed": dense_init(ke, (cfg.vocab_size, cfg.d_model),
+                            jnp.dtype(cfg.dtype)),
+        "groups": grouped,           # (G, every, ...)
+        "trailing": trailing,        # (rest or 1, ...)
+        "shared": shared,            # single shared attn+mlp block
+        "final_norm": jnp.ones((cfg.d_model,), jnp.float32),
+        "lm_head": dense_init(kh, (cfg.d_model, cfg.vocab_size),
+                              jnp.dtype(cfg.dtype)),
+    }
+
+
+def _mamba_sub(x, lp, cfg):
+    return x + ssm.mamba_forward(lp["mamba"],
+                                 rmsnorm(x, lp["norm"], cfg.norm_eps), cfg)
+
+
+def _shared_block(sp, x, cfg, *, attn_impl="auto"):
+    h = rmsnorm(x, sp["ln1"], cfg.norm_eps)
+    q, k, v = attn_qkv(sp["attn"], h, cfg)
+    ctx = attention(q, k, v, causal=True, window=cfg.sliding_window,
+                    impl=attn_impl)
+    x = x + attn_out(sp["attn"], ctx, cfg)
+    h = rmsnorm(x, sp["ln2"], cfg.norm_eps)
+    return x + mlp(sp["mlp"], h)
+
+
+def _head(params, x, cfg):
+    x = rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    return constrain(x @ params["lm_head"], "batch", None, "vocab")
+
+
+def forward(params, batch, cfg, *, remat: bool = False, attn_impl="auto"):
+    x = params["embed"][batch["tokens"]].astype(jnp.dtype(cfg.dtype))
+    g, rest = _gl(cfg)
+    sp = params["shared"]
+
+    def group(x, glp):
+        def inner(x, lp):
+            return _mamba_sub(x, lp, cfg), None
+        x, _ = jax.lax.scan(inner, x, glp)
+        return _shared_block(sp, x, cfg, attn_impl=attn_impl), None
+
+    if remat:
+        group = jax.checkpoint(group, prevent_cse=False)
+    x, _ = jax.lax.scan(group, x, params["groups"])
+    if rest:
+        def inner(x, lp):
+            return _mamba_sub(x, lp, cfg), None
+        x, _ = jax.lax.scan(inner, x, params["trailing"])
+    return _head(params, x, cfg), jnp.zeros((), jnp.float32)
+
+
+def init_cache(cfg, batch: int, max_len: int, dtype=None):
+    dtype = dtype or jnp.dtype(cfg.dtype)
+    g, rest = _gl(cfg)
+    w = cache_window(cfg, max_len)
+    one = ssm.init_mamba_cache(cfg, batch, dtype)
+    kv = kvcache.init_kv(batch, w, cfg.num_kv_heads, cfg.head_dim, dtype)
+    stack = lambda t, n: jax.tree.map(
+        lambda a: jnp.zeros((n,) + a.shape, a.dtype), t)
+    return {"ssm_g": stack(one, g * cfg.hybrid_attn_every),
+            "ssm_t": stack(one, max(rest, 1)),
+            "kv": stack(kv, g),
+            "pos": jnp.zeros((), jnp.int32)}
+
+
+def prefill(params, batch, cfg, cache, *, attn_impl="auto"):
+    tokens = batch["tokens"]
+    s = tokens.shape[1]
+    x = params["embed"][tokens].astype(jnp.dtype(cfg.dtype))
+    g, rest = _gl(cfg)
+    sp = params["shared"]
+    w = cache["kv"]["k"].shape[2]
+
+    def group(x, glp):
+        def inner(x, lp):
+            y, st = ssm.mamba_forward(
+                lp["mamba"], rmsnorm(x, lp["norm"], cfg.norm_eps), cfg,
+                return_state=True)
+            return x + y, st
+        x, sts = jax.lax.scan(inner, x, glp)
+        h = rmsnorm(x, sp["ln1"], cfg.norm_eps)
+        q, k, v = attn_qkv(sp["attn"], h, cfg)
+        ctx = attention(q, k, v, causal=True, window=cfg.sliding_window,
+                        impl=attn_impl)
+        x = x + attn_out(sp["attn"], ctx, cfg)
+        x = x + mlp(sp["mlp"], rmsnorm(x, sp["ln2"], cfg.norm_eps))
+        return x, (sts, {"k": kvcache.fit_prefill(k, w), "v": kvcache.fit_prefill(v, w)})
+
+    x, (ssm_states, kvs) = jax.lax.scan(group, x, params["groups"])
+    # ssm_states: (G, every, ...) -> flatten to (G*every, ...)
+    ssm_g = jax.tree.map(lambda a: a.reshape((-1,) + a.shape[2:]), ssm_states)
+    if rest:
+        def inner(x, lp):
+            y, st = ssm.mamba_forward(
+                lp["mamba"], rmsnorm(x, lp["norm"], cfg.norm_eps), cfg,
+                return_state=True)
+            return x + y, st
+        x, ssm_t = jax.lax.scan(inner, x, params["trailing"])
+    else:
+        ssm_t = jax.tree.map(lambda a: a[None] * 0,
+                             ssm.init_mamba_cache(cfg, tokens.shape[0],
+                                                  x.dtype))
+    cache = {"ssm_g": ssm_g, "ssm_t": ssm_t, "kv": kvs,
+             "pos": jnp.asarray(s, jnp.int32)}
+    return _head(params, x[:, -1:], cfg), cache
+
+
+def decode_step(params, cache, token, pos, cfg):
+    x = params["embed"][token].astype(jnp.dtype(cfg.dtype))
+    g, rest = _gl(cfg)
+    sp = params["shared"]
+    w = cache["kv"]["k"].shape[2]
+    ring = cfg.sliding_window > 0 and w == cfg.sliding_window
+    positions = jnp.full((token.shape[0], 1), pos)
+    e = cfg.hybrid_attn_every
+    ssm_g = jax.tree.map(lambda a: a.reshape((g, e) + a.shape[1:]),
+                         cache["ssm_g"])
+
+    def group(x, inp):
+        glp, sts, kv = inp
+
+        def inner(x_st, lp_st):
+            x, _ = x_st
+            lp, st = lp_st
+            y, st = ssm.mamba_step(lp["mamba"],
+                                   st, rmsnorm(x, lp["norm"], cfg.norm_eps),
+                                   cfg)
+            return (x + y, None), st
+
+        (x, _), sts = jax.lax.scan(inner, (x, None), (glp, sts))
+        h = rmsnorm(x, sp["ln1"], cfg.norm_eps)
+        q, k, v = attn_qkv(sp["attn"], h, cfg, positions=positions)
+        kv = kvcache.write_kv(kv, k, v, pos, ring=ring, window=w)
+        kpos = kvcache.ring_kpos(pos, w) if ring else None
+        kv_len = None if ring else jnp.minimum(pos + 1, w)
+        ctx = attention(q, kv["k"], kv["v"], causal=True,
+                        window=cfg.sliding_window, q_offset=pos,
+                        kv_len=kv_len, kpos=kpos)
+        x = x + attn_out(sp["attn"], ctx, cfg)
+        x = x + mlp(sp["mlp"], rmsnorm(x, sp["ln2"], cfg.norm_eps))
+        return x, (sts, kv)
+
+    x, (ssm_g, kvs) = jax.lax.scan(group, x, (params["groups"], ssm_g,
+                                              cache["kv"]))
+    ssm_g = jax.tree.map(lambda a: a.reshape((-1,) + a.shape[2:]), ssm_g)
+    ssm_t = cache["ssm_t"]
+    if rest:
+        def inner(x_st, lp_st):
+            x, _ = x_st
+            lp, st = lp_st
+            y, st = ssm.mamba_step(lp["mamba"],
+                                   st, rmsnorm(x, lp["norm"], cfg.norm_eps),
+                                   cfg)
+            return (x + y, None), st
+        (x, _), ssm_t = jax.lax.scan(inner, (x, None),
+                                     (params["trailing"], cache["ssm_t"]))
+    new = {"ssm_g": ssm_g, "ssm_t": ssm_t, "kv": kvs, "pos": pos + 1}
+    return _head(params, x, cfg), new

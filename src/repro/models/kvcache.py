@@ -1,0 +1,48 @@
+"""KV-cache utilities shared by all attention archs.
+
+Two layouts:
+  * linear cache: (B, Smax, Hkv, D) with write at ``pos`` — train-free decode
+    up to Smax (decode_32k).
+  * ring cache (sliding-window archs at long_500k): (B, W, Hkv, D); slot
+    ``pos % W``; the slot->absolute-position map is recomputed analytically,
+    so memory is O(W) not O(S) — the sub-quadratic carve-in of DESIGN.md §4.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def init_kv(batch: int, length: int, n_kv: int, head_dim: int, dtype):
+    shape = (batch, length, n_kv, head_dim)
+    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+
+
+def ring_slot(pos, window: int):
+    return pos % window
+
+
+def ring_kpos(pos, window: int):
+    """Absolute position held by each ring slot at time ``pos`` (may be <0
+    for not-yet-filled slots; the attention mask drops those)."""
+    i = jnp.arange(window)
+    return pos - ((pos - i) % window)
+
+
+def fit_prefill(k, w: int):
+    """Fit freshly-computed prefill K or V (B,S,Hkv,D) into a cache of
+    length ``w``.  S >= w: keep the last w (ring layout is consistent when
+    S % w == 0, which holds for all assigned shapes).  S < w: place at the
+    front and zero-pad the tail (linear layout)."""
+    s = k.shape[1]
+    if s >= w:
+        return k[:, -w:]
+    return jnp.pad(k, ((0, 0), (0, w - s), (0, 0), (0, 0)))
+
+
+def write_kv(cache, k_new, v_new, pos, *, ring: bool = False, window: int = 0):
+    """k_new/v_new: (B, 1, Hkv, D); pos: scalar int32."""
+    idx = ring_slot(pos, window) if ring else pos
+    cache = dict(cache)
+    cache["k"] = cache["k"].at[:, idx].set(k_new[:, 0])
+    cache["v"] = cache["v"].at[:, idx].set(v_new[:, 0])
+    return cache

@@ -1,0 +1,86 @@
+"""Pure-SSM LM (mamba2-780m): attention-free, constant-size decode state."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.pspec import constrain
+from repro.models import ssm
+from repro.models.layers import dense_init, rmsnorm
+
+
+def init_layer(key, cfg):
+    return {"norm": jnp.ones((cfg.d_model,), jnp.float32),
+            "mamba": ssm.init_mamba(key, cfg)}
+
+
+def init(key, cfg):
+    ke, kl, kh = jax.random.split(key, 3)
+    layers = jax.vmap(lambda k: init_layer(k, cfg))(
+        jax.random.split(kl, cfg.num_layers))
+    return {
+        "embed": dense_init(ke, (cfg.vocab_size, cfg.d_model),
+                            jnp.dtype(cfg.dtype)),
+        "layers": layers,
+        "final_norm": jnp.ones((cfg.d_model,), jnp.float32),
+        "lm_head": dense_init(kh, (cfg.d_model, cfg.vocab_size),
+                              jnp.dtype(cfg.dtype)),
+    }
+
+
+def _head(params, x, cfg):
+    x = rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    return constrain(x @ params["lm_head"], "batch", None, "vocab")
+
+
+def forward(params, batch, cfg, *, remat: bool = False, **_):
+    x = params["embed"][batch["tokens"]].astype(jnp.dtype(cfg.dtype))
+    x = constrain(x, "batch", None, None)
+
+    def body(x, lp):
+        y = ssm.mamba_forward(lp["mamba"], rmsnorm(x, lp["norm"],
+                                                   cfg.norm_eps), cfg)
+        return x + y, None
+
+    if remat:
+        body = jax.checkpoint(body, prevent_cse=False)
+    x, _ = jax.lax.scan(body, x, params["layers"])
+    return _head(params, x, cfg), jnp.zeros((), jnp.float32)
+
+
+def init_cache(cfg, batch: int, max_len: int, dtype=None):
+    dtype = dtype or jnp.dtype(cfg.dtype)
+    one = ssm.init_mamba_cache(cfg, batch, dtype)
+    return {
+        "ssm": jax.tree.map(
+            lambda a: jnp.zeros((cfg.num_layers,) + a.shape, a.dtype), one),
+        "pos": jnp.zeros((), jnp.int32),
+    }
+
+
+def prefill(params, batch, cfg, cache, **_):
+    tokens = batch["tokens"]
+    x = params["embed"][tokens].astype(jnp.dtype(cfg.dtype))
+
+    def body(x, lp):
+        y, st = ssm.mamba_forward(lp["mamba"],
+                                  rmsnorm(x, lp["norm"], cfg.norm_eps),
+                                  cfg, return_state=True)
+        return x + y, st
+
+    x, states = jax.lax.scan(body, x, params["layers"])
+    cache = {"ssm": states, "pos": jnp.asarray(tokens.shape[1], jnp.int32)}
+    return _head(params, x[:, -1:], cfg), cache
+
+
+def decode_step(params, cache, token, pos, cfg):
+    x = params["embed"][token].astype(jnp.dtype(cfg.dtype))
+
+    def body(x, lp_st):
+        lp, st = lp_st
+        y, st = ssm.mamba_step(lp["mamba"],
+                               st, rmsnorm(x, lp["norm"], cfg.norm_eps), cfg)
+        return x + y, st
+
+    x, states = jax.lax.scan(body, x, (params["layers"], cache["ssm"]))
+    return _head(params, x, cfg), {"ssm": states, "pos": pos + 1}

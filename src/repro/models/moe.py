@@ -1,0 +1,104 @@
+"""Mixture-of-Experts FFN: top-k router + capacity-based dispatch.
+
+Dispatch is GShard/MaxText-style "dropping": each expert has a static
+capacity C = ceil(T * k / E * capacity_factor); tokens beyond capacity are
+dropped (their residual passes through). All shapes are static, so the block
+lowers cleanly under pjit on the production mesh.
+
+Sharding (installed by core/sharding.py):
+  * expert-parallel:  experts axis of w_* sharded over the "model" mesh axis;
+    the (E, C, d) dispatch buffer is likewise sharded over experts, which
+    makes GSPMD emit the all-to-all the paper's MoE case-studies describe.
+  * aux load-balance loss (Shazeer-style) returned for the trainer.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.pspec import constrain
+from repro.models.layers import dense_init
+
+
+def init_moe(key, cfg):
+    d, f, e = cfg.d_model, cfg.d_ff, cfg.num_experts
+    dt = jnp.dtype(cfg.dtype)
+    ks = jax.random.split(key, 4)
+    return {
+        "router": dense_init(ks[0], (d, e), jnp.float32, scale=0.02),
+        "w_gate": dense_init(ks[1], (e, d, f), dt),
+        "w_up": dense_init(ks[2], (e, d, f), dt),
+        "w_down": dense_init(ks[3], (e, f, d), dt,
+                             scale=0.02 / np.sqrt(2 * cfg.num_layers)),
+    }
+
+
+def capacity(num_tokens: int, cfg) -> int:
+    c = int(np.ceil(num_tokens * cfg.experts_per_token / cfg.num_experts
+                    * cfg.moe_capacity_factor))
+    return max(8, -(-c // 8) * 8)  # round up to 8 for TPU-friendly layouts
+
+
+def router_topk(router_w, x, cfg) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """x:(T,d) -> gates (T,k), expert ids (T,k), aux load-balance loss."""
+    logits = x.astype(jnp.float32) @ router_w            # (T, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gates, idx = jax.lax.top_k(probs, cfg.experts_per_token)
+    gates = gates / jnp.clip(gates.sum(-1, keepdims=True), 1e-9)
+    # Shazeer aux loss: E * sum_e fraction_tokens_e * mean_prob_e
+    e = cfg.num_experts
+    me = probs.mean(0)                                   # (E,)
+    ce = jnp.zeros((e,), jnp.float32).at[idx.reshape(-1)].add(
+        1.0 / (idx.size))
+    aux = e * jnp.sum(me * ce)
+    return gates, idx, aux
+
+
+def moe_ffn(p, x, cfg, *, act=jax.nn.silu):
+    """x: (B, S, d) -> (B, S, d), aux_loss (scalar fp32)."""
+    b, s, d = x.shape
+    t = b * s
+    xt = x.reshape(t, d)
+    gates, idx, aux = router_topk(p["router"], xt, cfg)   # (T,k)
+
+    k, e = cfg.experts_per_token, cfg.num_experts
+    cap = capacity(t, cfg)
+
+    flat_e = idx.reshape(-1)                              # (T*k,)
+    # position of each (token, slot) within its expert, in token order
+    onehot = jax.nn.one_hot(flat_e, e, dtype=jnp.int32)   # (T*k, E)
+    pos_in_e = jnp.cumsum(onehot, axis=0) - 1             # (T*k, E)
+    pos = jnp.take_along_axis(pos_in_e, flat_e[:, None], axis=1)[:, 0]
+    keep = pos < cap
+    # scatter-add tokens into the (E*C, d) dispatch buffer. The indices only
+    # touch dim 0, so constraining d over "model" lets GSPMD partition the
+    # scatter instead of replicating the whole buffer on every device.
+    dest = jnp.where(keep, flat_e * cap + pos, 0)
+    src = jnp.repeat(xt, k, axis=0)                       # (T*k, d)
+    src = jnp.where(keep[:, None], src, 0)                # dropped -> +0
+    src = constrain(src, None, "moe_dispatch_d")
+    buf = jnp.zeros((e * cap, d), xt.dtype).at[dest].add(src)
+    buf = constrain(buf, None, "moe_dispatch_d")
+    buf = buf.reshape(e, cap, d)
+    buf = constrain(buf, "experts", "moe_cap", None)
+
+    # expert computation: batched over the (sharded) expert axis
+    h = jnp.einsum("ecd,edf->ecf", buf, p["w_up"])
+    g = jnp.einsum("ecd,edf->ecf", buf, p["w_gate"])
+    h = act(g) * h
+    h = constrain(h, "experts", "moe_cap", None)
+    y_e = jnp.einsum("ecf,efd->ecd", h, p["w_down"])
+    y_e = constrain(y_e, "experts", "moe_cap", None)
+
+    # combine: gather each kept slot back and weight by its gate.
+    # Same trick: gather indexes dim 0 only -> keep d sharded over "model".
+    flat_gate = jnp.where(keep, gates.reshape(-1), 0.0)
+    y = constrain(y_e.reshape(e * cap, d), None, "moe_dispatch_d")
+    gathered = jnp.where(keep[:, None], y[dest], 0)
+    gathered = constrain(gathered, None, "moe_dispatch_d")
+    out = (gathered * flat_gate[:, None].astype(gathered.dtype)
+           ).reshape(t, k, d).sum(axis=1)
+    return out.reshape(b, s, d), aux

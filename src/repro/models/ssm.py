@@ -1,0 +1,195 @@
+"""Mamba2 block — SSD (state-space duality) with the chunked algorithm
+[arXiv:2405.21060], plus the O(1)-state recurrent step for decode.
+
+Layout: H SSD heads of P channels (din = H*P = expand*d_model), single
+B/C group (G=1, as in the released Mamba2 models), state size N per head.
+
+TP adaptation of the paper's Megatron idea for an attention-free block
+(DESIGN.md §4.1): in_proj is column-split so each device owns whole heads
+(the chunked scan is then fully local); out_proj is row-split => exactly one
+all-reduce per block, the same collective count as the Megatron MLP.
+
+train/prefill: chunked SSD — intra-chunk (Q x Q) masked-decay attention-dual
++ inter-chunk state scan (lax.scan).  decode: h <- a*h + dt*B(x)x, y = C.h.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.pspec import constrain
+from repro.models.layers import dense_init, rmsnorm
+
+
+def _din(cfg) -> int:
+    return cfg.ssm_heads * cfg.ssm_head_dim
+
+
+def conv_channels(cfg) -> int:
+    return _din(cfg) + 2 * cfg.ssm_state
+
+
+def init_mamba(key, cfg):
+    d, h, n, w = cfg.d_model, cfg.ssm_heads, cfg.ssm_state, cfg.ssm_conv_width
+    din = _din(cfg)
+    dt = jnp.dtype(cfg.dtype)
+    ks = jax.random.split(key, 4)
+    return {
+        # order: [z, x, B, C, dt]
+        "in_proj": dense_init(ks[0], (d, 2 * din + 2 * n + h), dt),
+        "conv_w": dense_init(ks[1], (w, conv_channels(cfg)), jnp.float32, 0.5),
+        "conv_b": jnp.zeros((conv_channels(cfg),), jnp.float32),
+        "dt_bias": jnp.log(jnp.expm1(
+            jnp.linspace(1e-3, 1e-1, h, dtype=jnp.float32))),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, h, dtype=jnp.float32)),
+        "D": jnp.ones((h,), jnp.float32),
+        "gn_scale": jnp.ones((din,), jnp.float32),
+        "out_proj": dense_init(ks[2], (din, d), dt,
+                               scale=0.02 / np.sqrt(2 * cfg.num_layers)),
+    }
+
+
+def _split_in(p, x, cfg):
+    """in_proj + split. x:(B,S,d) -> z, xbc:(B,S,din+2N), dt:(B,S,H)."""
+    din, n, h = _din(cfg), cfg.ssm_state, cfg.ssm_heads
+    zxbcdt = x @ p["in_proj"]
+    zxbcdt = constrain(zxbcdt, "batch", None, "ssm_inner")
+    z = zxbcdt[..., :din]
+    xbc = zxbcdt[..., din:2 * din + 2 * n]
+    dt_raw = zxbcdt[..., 2 * din + 2 * n:].astype(jnp.float32)
+    dt = jax.nn.softplus(dt_raw + p["dt_bias"])
+    return z, xbc, dt
+
+
+def _causal_conv(xbc, conv_w, conv_b, *, init_state=None):
+    """Depthwise causal conv (width W) over (B,S,C). Returns y, final tail."""
+    w = conv_w.shape[0]
+    x32 = xbc.astype(jnp.float32)
+    if init_state is None:
+        pad = jnp.zeros((x32.shape[0], w - 1, x32.shape[2]), jnp.float32)
+    else:
+        pad = init_state.astype(jnp.float32)
+    xp = jnp.concatenate([pad, x32], axis=1)
+    y = sum(xp[:, i:i + xbc.shape[1]] * conv_w[i] for i in range(w)) + conv_b
+    tail = xp[:, -(w - 1):] if w > 1 else xp[:, :0]
+    return jax.nn.silu(y).astype(xbc.dtype), tail.astype(xbc.dtype)
+
+
+def ssd_chunked(xh, dt, A, Bm, Cm, *, chunk: int):
+    """Chunked SSD.  xh:(B,S,H,P) dt:(B,S,H) A:(H,) Bm,Cm:(B,S,N).
+
+    Returns y:(B,S,H,P) and final state (B,H,P,N).
+    """
+    b, s, h, p_ = xh.shape
+    n = Bm.shape[-1]
+    q = min(chunk, s)
+    assert s % q == 0, (s, q)
+    nc = s // q
+
+    dtA = dt * A[None, None, :]                        # (B,S,H)  (A negative)
+    x_dt = xh * dt[..., None]                          # absorb dt into x
+    # chunked views
+    la = dtA.reshape(b, nc, q, h)
+    cum = jnp.cumsum(la, axis=2)                       # (B,nc,Q,H) log-decay to t
+    xc = x_dt.reshape(b, nc, q, h, p_)
+    bc = Bm.reshape(b, nc, q, n)
+    cc = Cm.reshape(b, nc, q, n)
+
+    # ---- intra-chunk (the "attention dual"):
+    # att[b,c,h,i,j] = (C_i . B_j) * exp(cum_i - cum_j) for i >= j
+    scores = jnp.einsum("bcin,bcjn->bcij", cc, bc,
+                        preferred_element_type=jnp.float32)
+    dec = cum[:, :, :, None, :] - cum[:, :, None, :, :]      # (B,nc,i,j,H)
+    mask = jnp.tril(jnp.ones((q, q), bool))
+    dec = jnp.where(mask[None, None, :, :, None], dec, -jnp.inf)
+    att = scores[..., None] * jnp.exp(dec)                   # (B,nc,i,j,H)
+    y_intra = jnp.einsum("bcijh,bcjhp->bcihp", att,
+                         xc.astype(jnp.float32))
+
+    # ---- chunk states: S_c[h,p,n] = sum_j exp(cum_last - cum_j) B_j x_j
+    dec_end = jnp.exp(cum[:, :, -1:, :] - cum)               # (B,nc,Q,H)
+    states = jnp.einsum("bcjn,bcjh,bcjhp->bchpn", bc.astype(jnp.float32),
+                        dec_end, xc.astype(jnp.float32))
+
+    # ---- inter-chunk scan
+    chunk_decay = jnp.exp(cum[:, :, -1, :])                  # (B,nc,H)
+
+    def step(hprev, inp):
+        st, cd = inp                                          # (B,H,P,N),(B,H)
+        return cd[:, :, None, None] * hprev + st, hprev
+
+    h0 = jnp.zeros((b, h, p_, n), jnp.float32)
+    hlast, hprevs = jax.lax.scan(
+        step, h0, (states.swapaxes(0, 1), chunk_decay.swapaxes(0, 1)))
+    hprevs = hprevs.swapaxes(0, 1)                           # (B,nc,H,P,N)
+
+    # y_inter[i] = exp(cum_i) * C_i . h_prev(chunk)
+    y_inter = jnp.einsum("bcin,bchpn->bcihp", cc.astype(jnp.float32), hprevs)
+    y_inter = y_inter * jnp.exp(cum)[..., None]              # (B,nc,Q,H,1)
+    y = (y_intra + y_inter).reshape(b, s, h, p_)
+    return y.astype(xh.dtype), hlast
+
+
+def mamba_forward(p, x, cfg, *, return_state: bool = False):
+    """Full-sequence Mamba2 block. x:(B,S,d) -> (B,S,d) [, cache]."""
+    din, n, h = _din(cfg), cfg.ssm_state, cfg.ssm_heads
+    z, xbc, dt = _split_in(p, x, cfg)
+    xbc, conv_tail = _causal_conv(xbc, p["conv_w"], p["conv_b"])
+    xh = xbc[..., :din].reshape(*x.shape[:2], h, cfg.ssm_head_dim)
+    Bm = xbc[..., din:din + n]
+    Cm = xbc[..., din + n:]
+    A = -jnp.exp(p["A_log"])
+    xh = constrain(xh, "batch", None, "ssm_heads", None)
+    y, hlast = ssd_chunked(xh, dt, A, Bm, Cm, chunk=cfg.ssm_chunk)
+    y = (y.astype(jnp.float32)
+         + xh.astype(jnp.float32) * p["D"][None, None, :, None])
+    y = y.reshape(*x.shape[:2], din).astype(x.dtype)
+    y = rmsnorm(y * jax.nn.silu(z.astype(jnp.float32)).astype(y.dtype),
+                p["gn_scale"], cfg.norm_eps)
+    out = y @ p["out_proj"]
+    out = constrain(out, "batch", None, None)
+    if return_state:
+        return out, {"state": hlast, "conv": conv_tail}
+    return out
+
+
+def mamba_step(p, cache, x_t, cfg):
+    """One decode token. x_t:(B,1,d), cache {state:(B,H,P,N), conv:(B,W-1,C)}."""
+    din, n, h = _din(cfg), cfg.ssm_state, cfg.ssm_heads
+    z, xbc, dt = _split_in(p, x_t, cfg)                   # (B,1,*)
+    w = cfg.ssm_conv_width
+    hist = jnp.concatenate([cache["conv"].astype(jnp.float32),
+                            xbc.astype(jnp.float32)], axis=1)  # (B,W,C)
+    y = (hist * p["conv_w"][None]).sum(1, keepdims=True) + p["conv_b"]
+    xbc_c = jax.nn.silu(y).astype(xbc.dtype)
+    new_conv = hist[:, 1:].astype(xbc.dtype)
+
+    xh = xbc_c[..., :din].reshape(-1, h, cfg.ssm_head_dim)     # (B,H,P)
+    Bm = xbc_c[:, 0, din:din + n]                              # (B,N)
+    Cm = xbc_c[:, 0, din + n:]
+    A = -jnp.exp(p["A_log"])
+    dt0 = dt[:, 0]                                             # (B,H)
+    a = jnp.exp(dt0 * A[None])                                 # (B,H)
+    upd = jnp.einsum("bh,bn,bhp->bhpn", dt0, Bm.astype(jnp.float32),
+                     xh.astype(jnp.float32))
+    state = a[:, :, None, None] * cache["state"] + upd
+    y_t = jnp.einsum("bn,bhpn->bhp", Cm.astype(jnp.float32), state)
+    y_t = y_t + xh.astype(jnp.float32) * p["D"][None, :, None]
+    y_t = y_t.reshape(x_t.shape[0], 1, din)
+    y_t = rmsnorm(y_t.astype(x_t.dtype) *
+                  jax.nn.silu(z.astype(jnp.float32)).astype(x_t.dtype),
+                  p["gn_scale"], cfg.norm_eps)
+    out = y_t @ p["out_proj"]
+    return out, {"state": state, "conv": new_conv}
+
+
+def init_mamba_cache(cfg, batch: int, dtype) -> dict:
+    h, p_, n = cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state
+    return {
+        "state": jnp.zeros((batch, h, p_, n), jnp.float32),
+        "conv": jnp.zeros((batch, cfg.ssm_conv_width - 1, conv_channels(cfg)),
+                          dtype),
+    }

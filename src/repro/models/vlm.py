@@ -1,0 +1,230 @@
+"""Llama-3.2-Vision-style VLM backbone: a dense decoder where every
+``cross_attn_every`` self-attention layers are followed by one gated
+cross-attention layer over image patch embeddings [hf:Llama-3.2-Vision].
+
+The ViT tower + projector are STUBBED (assignment carve-out):
+``batch["image_embeds"]`` carries (B, num_image_tokens, d_model).
+
+Structure (scanned over G groups, O(1) HLO in depth):
+    G = num_layers // (cross_attn_every + 1) groups of
+        [cross_attn_every x self-layer] -> 1 cross-layer
+    + trailing self layers.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.pspec import constrain
+from repro.models import kvcache
+from repro.models.layers import (attention, attn_out, attn_qkv, dense_init,
+                                 init_attn, init_mlp, mlp, rmsnorm)
+from repro.models.transformer import cache_window, init_layer
+from repro.models.encdec import cross_kv as _cross_kv_proj
+
+
+def _gl(cfg):
+    per = cfg.cross_attn_every + 1
+    g = cfg.num_layers // per
+    rest = cfg.num_layers - g * per
+    return g, rest
+
+
+def init_cross_layer(key, cfg):
+    kc, km = jax.random.split(key)
+    return {"xattn": init_attn(kc, cfg), "mlp": init_mlp(km, cfg),
+            "lnx": jnp.ones((cfg.d_model,), jnp.float32),
+            "ln2": jnp.ones((cfg.d_model,), jnp.float32),
+            "gate_attn": jnp.zeros((), jnp.float32),
+            "gate_mlp": jnp.zeros((), jnp.float32)}
+
+
+def init(key, cfg):
+    ke, kg, kc, kr, kh = jax.random.split(key, 5)
+    g, rest = _gl(cfg)
+    selfs = jax.vmap(jax.vmap(lambda k: init_layer(k, cfg)))(
+        jax.random.split(kg, (g, cfg.cross_attn_every)))
+    crosses = jax.vmap(lambda k: init_cross_layer(k, cfg))(
+        jax.random.split(kc, g))
+    trailing = jax.vmap(lambda k: init_layer(k, cfg))(
+        jax.random.split(kr, max(rest, 1)))
+    return {
+        "embed": dense_init(ke, (cfg.vocab_size, cfg.d_model),
+                            jnp.dtype(cfg.dtype)),
+        "self_groups": selfs, "cross": crosses, "trailing": trailing,
+        "final_norm": jnp.ones((cfg.d_model,), jnp.float32),
+        "lm_head": dense_init(kh, (cfg.d_model, cfg.vocab_size),
+                              jnp.dtype(cfg.dtype)),
+    }
+
+
+def _self_block(lp, x, cfg, *, attn_impl="auto", positions=None, kv=None,
+                pos=None, w=0, ring=False, use_cp=False):
+    h = rmsnorm(x, lp["ln1"], cfg.norm_eps)
+    q, k, v = attn_qkv(lp["attn"], h, cfg, positions=positions)
+    if kv is None:
+        ctx = attention(q, k, v, causal=True, window=cfg.sliding_window,
+                        impl=attn_impl)
+        new_kv = (k, v)
+    elif use_cp:
+        from repro.models.cp_attention import cp_decode_attention
+        ctx, new_kv = cp_decode_attention(q, kv, k, v, pos,
+                                          window=cfg.sliding_window)
+    else:
+        kv = kvcache.write_kv(kv, k, v, pos, ring=ring, window=w)
+        kpos = kvcache.ring_kpos(pos, w) if ring else None
+        kv_len = None if ring else jnp.minimum(pos + 1, w)
+        ctx = attention(q, kv["k"], kv["v"], causal=True,
+                        window=cfg.sliding_window, q_offset=pos,
+                        kv_len=kv_len, kpos=kpos)
+        new_kv = kv
+    x = x + attn_out(lp["attn"], ctx, cfg)
+    x = x + mlp(lp["mlp"], rmsnorm(x, lp["ln2"], cfg.norm_eps))
+    return x, new_kv
+
+
+def _cross_block(cp, x, img_kv, cfg):
+    """Gated cross-attention (gates init 0 => vision is a no-op at init,
+    as in the source model)."""
+    h = rmsnorm(x, cp["lnx"], cfg.norm_eps)
+    b, s, _ = h.shape
+    q = (h @ cp["xattn"]["wq"]).reshape(b, s, cfg.num_heads, cfg.head_dim)
+    ctx = attention(q, img_kv["k"], img_kv["v"], causal=False, impl="full")
+    x = x + (jnp.tanh(cp["gate_attn"]).astype(x.dtype)
+             * attn_out(cp["xattn"], ctx, cfg))
+    h = rmsnorm(x, cp["ln2"], cfg.norm_eps)
+    x = x + jnp.tanh(cp["gate_mlp"]).astype(x.dtype) * mlp(cp["mlp"], h)
+    return x
+
+
+def _head(params, x, cfg):
+    x = rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    return constrain(x @ params["lm_head"], "batch", None, "vocab")
+
+
+def forward(params, batch, cfg, *, remat: bool = False, attn_impl="auto"):
+    """batch: {"tokens": (B,S), "image_embeds": (B,N_img,d)}."""
+    x = params["embed"][batch["tokens"]].astype(jnp.dtype(cfg.dtype))
+    img = batch["image_embeds"].astype(x.dtype)
+    g, rest = _gl(cfg)
+
+    def group(x, glp):
+        slp, cp = glp
+
+        def inner(x, lp):
+            y, _ = _self_block(lp, x, cfg, attn_impl=attn_impl)
+            return y, None
+
+        x, _ = jax.lax.scan(inner, x, slp)
+        img_kv = _cross_kv_proj(cp, img, cfg)
+        return _cross_block(cp, x, img_kv, cfg), None
+
+    if remat:
+        group = jax.checkpoint(group, prevent_cse=False)
+    x, _ = jax.lax.scan(group, x, (params["self_groups"], params["cross"]))
+    if rest:
+        def inner(x, lp):
+            y, _ = _self_block(lp, x, cfg, attn_impl=attn_impl)
+            return y, None
+        x, _ = jax.lax.scan(inner, x, params["trailing"])
+    return _head(params, x, cfg), jnp.zeros((), jnp.float32)
+
+
+def init_cache(cfg, batch: int, max_len: int, dtype=None):
+    dtype = dtype or jnp.dtype(cfg.dtype)
+    g, rest = _gl(cfg)
+    w = cache_window(cfg, max_len)
+    kv = kvcache.init_kv(batch, w, cfg.num_kv_heads, cfg.head_dim, dtype)
+    xkv = kvcache.init_kv(batch, cfg.num_image_tokens, cfg.num_kv_heads,
+                          cfg.head_dim, dtype)
+    stack = lambda t, n: jax.tree.map(
+        lambda a: jnp.zeros((n,) + a.shape, a.dtype), t)
+    return {"kv_g": stack(kv, g * cfg.cross_attn_every),
+            "kv_t": stack(kv, max(rest, 1)),
+            "xkv": stack(xkv, g),
+            "pos": jnp.zeros((), jnp.int32)}
+
+
+def prefill(params, batch, cfg, cache, *, attn_impl="auto"):
+    x = params["embed"][batch["tokens"]].astype(jnp.dtype(cfg.dtype))
+    img = batch["image_embeds"].astype(x.dtype)
+    s = batch["tokens"].shape[1]
+    g, rest = _gl(cfg)
+    w = cache["kv_g"]["k"].shape[2]
+
+    def group(x, glp):
+        slp, cp = glp
+
+        def inner(x, lp):
+            h = rmsnorm(x, lp["ln1"], cfg.norm_eps)
+            q, k, v = attn_qkv(lp["attn"], h, cfg)
+            ctx = attention(q, k, v, causal=True, window=cfg.sliding_window,
+                            impl=attn_impl)
+            x = x + attn_out(lp["attn"], ctx, cfg)
+            x = x + mlp(lp["mlp"], rmsnorm(x, lp["ln2"], cfg.norm_eps))
+            return x, {"k": kvcache.fit_prefill(k, w), "v": kvcache.fit_prefill(v, w)}
+
+        x, kvs = jax.lax.scan(inner, x, slp)
+        img_kv = _cross_kv_proj(cp, img, cfg)
+        return _cross_block(cp, x, img_kv, cfg), (kvs, img_kv)
+
+    x, (kv_g, xkvs) = jax.lax.scan(group, x,
+                                   (params["self_groups"], params["cross"]))
+    kv_g = jax.tree.map(lambda a: a.reshape((-1,) + a.shape[2:]), kv_g)
+    if rest:
+        def inner(x, lp):
+            h = rmsnorm(x, lp["ln1"], cfg.norm_eps)
+            q, k, v = attn_qkv(lp["attn"], h, cfg)
+            ctx = attention(q, k, v, causal=True, window=cfg.sliding_window,
+                            impl=attn_impl)
+            x = x + attn_out(lp["attn"], ctx, cfg)
+            x = x + mlp(lp["mlp"], rmsnorm(x, lp["ln2"], cfg.norm_eps))
+            return x, {"k": kvcache.fit_prefill(k, w), "v": kvcache.fit_prefill(v, w)}
+        x, kv_t = jax.lax.scan(inner, x, params["trailing"])
+    else:
+        kv_t = jax.tree.map(lambda a: a[None],
+                            kvcache.init_kv(x.shape[0], w, cfg.num_kv_heads,
+                                            cfg.head_dim, x.dtype))
+    cache = {"kv_g": kv_g, "kv_t": kv_t, "xkv": xkvs,
+             "pos": jnp.asarray(s, jnp.int32)}
+    return _head(params, x[:, -1:], cfg), cache
+
+
+def decode_step(params, cache, token, pos, cfg):
+    from repro.models.cp_attention import cp_available
+    x = params["embed"][token].astype(jnp.dtype(cfg.dtype))
+    g, rest = _gl(cfg)
+    w = cache["kv_g"]["k"].shape[2]
+    ring = cfg.sliding_window > 0 and w == cfg.sliding_window
+    use_cp = cfg.cp_decode and not ring and cp_available(cache["kv_g"]["k"][0])
+    positions = jnp.full((token.shape[0], 1), pos)
+    e = cfg.cross_attn_every
+    kv_g = jax.tree.map(lambda a: a.reshape((g, e) + a.shape[1:]),
+                        cache["kv_g"])
+
+    def group(x, inp):
+        (slp, cp), kvs, xkv = inp
+
+        def inner(x_, lp_kv):
+            lp, kv = lp_kv
+            y, kv = _self_block(lp, x_, cfg, positions=positions, kv=kv,
+                                pos=pos, w=w, ring=ring, use_cp=use_cp)
+            return y, kv
+
+        x, kvs = jax.lax.scan(inner, x, (slp, kvs))
+        return _cross_block(cp, x, xkv, cfg), (kvs, xkv)
+
+    x, (kv_g, _) = jax.lax.scan(
+        group, x, ((params["self_groups"], params["cross"]), kv_g,
+                   cache["xkv"]))
+    kv_g = jax.tree.map(lambda a: a.reshape((-1,) + a.shape[2:]), kv_g)
+    kv_t = cache["kv_t"]
+    if rest:
+        def inner(x_, lp_kv):
+            lp, kv = lp_kv
+            y, kv = _self_block(lp, x_, cfg, positions=positions, kv=kv,
+                                pos=pos, w=w, ring=ring, use_cp=use_cp)
+            return y, kv
+        x, kv_t = jax.lax.scan(inner, x, (params["trailing"], cache["kv_t"]))
+    new = {"kv_g": kv_g, "kv_t": kv_t, "xkv": cache["xkv"], "pos": pos + 1}
+    return _head(params, x, cfg), new

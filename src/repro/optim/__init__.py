@@ -1,0 +1,3 @@
+from repro.optim.optimizers import (adafactor_init, adafactor_update,
+                                    adamw_init, adamw_update, clip_by_global_norm,
+                                    cosine_lr, get_optimizer)

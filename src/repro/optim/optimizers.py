@@ -1,0 +1,134 @@
+"""Optimizers, from scratch in JAX (no optax on the box).
+
+* AdamW with fp32 master weights + fp32 m/v — Megatron-style mixed
+  precision; states are ZeRO-1 shardable (core/sharding.opt_state_pspecs).
+* Adafactor (factored second moments, no momentum, no master copy) — the
+  low-memory option the planner picks for the 1T-param MoE (DESIGN.md §4.1).
+* global-norm clipping + cosine schedule with linear warmup.
+
+All functions are pure pytree -> pytree; the trainer jits them inside
+train_step.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def cosine_lr(step, *, base_lr: float, warmup: int, total: int,
+              min_ratio: float = 0.1):
+    step = jnp.asarray(step, jnp.float32)
+    warm = base_lr * step / jnp.maximum(warmup, 1)
+    frac = jnp.clip((step - warmup) / jnp.maximum(total - warmup, 1), 0, 1)
+    cos = base_lr * (min_ratio + (1 - min_ratio) * 0.5 *
+                     (1 + jnp.cos(jnp.pi * frac)))
+    return jnp.where(step < warmup, warm, cos)
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    gn = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                      for g in jax.tree.leaves(grads)))
+    scale = jnp.minimum(1.0, max_norm / (gn + 1e-9))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale
+                                   ).astype(g.dtype), grads), gn
+
+
+# ------------------------------------------------------------------- AdamW
+
+def adamw_init(params):
+    f32 = lambda p: p.astype(jnp.float32)
+    return {
+        "m": jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params),
+        "v": jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params),
+        "master": jax.tree.map(f32, params),
+        "step": jnp.zeros((), jnp.int32),
+    }
+
+
+def adamw_update(grads, state, params, *, lr, b1=0.9, b2=0.95, eps=1e-8,
+                 weight_decay=0.1):
+    step = state["step"] + 1
+    t = step.astype(jnp.float32)
+
+    def upd(g, m, v, master):
+        g = g.astype(jnp.float32)
+        m = b1 * m + (1 - b1) * g
+        v = b2 * v + (1 - b2) * g * g
+        mhat = m / (1 - b1 ** t)
+        vhat = v / (1 - b2 ** t)
+        new_master = master - lr * (mhat / (jnp.sqrt(vhat) + eps)
+                                    + weight_decay * master)
+        return m, v, new_master
+
+    out = jax.tree.map(upd, grads, state["m"], state["v"], state["master"])
+    m = jax.tree.map(lambda o: o[0], out, is_leaf=lambda x: isinstance(x, tuple))
+    v = jax.tree.map(lambda o: o[1], out, is_leaf=lambda x: isinstance(x, tuple))
+    master = jax.tree.map(lambda o: o[2], out,
+                          is_leaf=lambda x: isinstance(x, tuple))
+    new_params = jax.tree.map(lambda mp, p: mp.astype(p.dtype), master, params)
+    return new_params, {"m": m, "v": v, "master": master, "step": step}
+
+
+# --------------------------------------------------------------- Adafactor
+
+def _factored_dims(shape):
+    """Last two non-trivial dims, if the tensor is big enough to factor."""
+    if len(shape) < 2 or shape[-1] < 2 or shape[-2] < 2:
+        return None
+    return len(shape) - 2, len(shape) - 1
+
+
+def adafactor_init(params):
+    """Parallel vr/vc trees (full-rank v lives in vr with a dummy vc) so
+    every tree in the update has the same structure as ``params``."""
+    def vr(p):
+        if _factored_dims(p.shape) is None:
+            return jnp.zeros(p.shape, jnp.float32)
+        return jnp.zeros(p.shape[:-1], jnp.float32)
+
+    def vc(p):
+        if _factored_dims(p.shape) is None:
+            return jnp.zeros((), jnp.float32)
+        return jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32)
+
+    return {"vr": jax.tree.map(vr, params),
+            "vc": jax.tree.map(vc, params),
+            "step": jnp.zeros((), jnp.int32)}
+
+
+def adafactor_update(grads, state, params, *, lr, decay=0.8, eps=1e-30,
+                     clip_threshold=1.0, weight_decay=0.0):
+    step = state["step"] + 1
+    t = step.astype(jnp.float32)
+    beta = 1.0 - t ** (-decay)
+
+    def upd(g, vr, vc, p):
+        g = g.astype(jnp.float32)
+        g2 = g * g + eps
+        if _factored_dims(p.shape) is not None:
+            vr = beta * vr + (1 - beta) * g2.mean(-1)
+            vc = beta * vc + (1 - beta) * g2.mean(-2)
+            denom = (vr[..., None] * vc[..., None, :]
+                     / jnp.maximum(vr.mean(-1)[..., None, None], eps))
+            u = g * jax.lax.rsqrt(denom + eps)
+        else:
+            vr = beta * vr + (1 - beta) * g2
+            u = g * jax.lax.rsqrt(vr + eps)
+        rms_u = jnp.sqrt(jnp.mean(u * u) + eps)
+        u = u / jnp.maximum(1.0, rms_u / clip_threshold)
+        p32 = p.astype(jnp.float32)
+        new_p = p32 - lr * u - lr * weight_decay * p32
+        return new_p.astype(p.dtype), vr, vc
+
+    out = jax.tree.map(upd, grads, state["vr"], state["vc"], params)
+    pick = lambda i: jax.tree.map(lambda o: o[i], out,
+                                  is_leaf=lambda x: isinstance(x, tuple))
+    return pick(0), {"vr": pick(1), "vc": pick(2), "step": step}
+
+
+def get_optimizer(name: str):
+    return {"adamw": (adamw_init, adamw_update),
+            "adafactor": (adafactor_init, adafactor_update)}[name]

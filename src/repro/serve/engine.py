@@ -1,0 +1,100 @@
+"""Serving engine: continuous-batching-lite over the decode step.
+
+A fixed-size slot table (the batch) holds independent requests at
+different generation depths. Because the model-side decode_step takes a
+single scalar ``pos`` (the production dry-run shape), the engine tracks
+per-slot positions and uses the PADDED decode trick: every slot steps with
+the same cache write cursor, but finished/empty slots are masked and their
+sampled tokens discarded. Admission fills free slots from a queue between
+steps (the standard orca/vllm-style outer loop, minus paged KV).
+
+This is deliberately host-side Python around the jitted step — the jitted
+inner step is shape-stable so the engine never recompiles after warmup.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import get_model
+
+
+@dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray                 # (len,) int32
+    max_new: int
+    out: List[int] = field(default_factory=list)
+    done: bool = False
+
+
+class ServeEngine:
+    def __init__(self, cfg, params, *, slots: int = 4, max_len: int = 256,
+                 eos_id: Optional[int] = None):
+        self.cfg, self.params = cfg, params
+        self.model = get_model(cfg)
+        self.slots = slots
+        self.max_len = max_len
+        self.eos_id = eos_id
+        self.queue: List[Request] = []
+        self.active: List[Optional[Request]] = [None] * slots
+        self.finished: Dict[int, Request] = {}
+        self._caches: List[Optional[dict]] = [None] * slots
+        self._step = jax.jit(
+            lambda p, c, t, i: self.model.decode_step(p, c, t, i, cfg))
+
+    def submit(self, rid: int, prompt: np.ndarray, max_new: int):
+        self.queue.append(Request(rid, np.asarray(prompt, np.int32),
+                                  max_new))
+
+    def _admit(self):
+        for s in range(self.slots):
+            if self.active[s] is None and self.queue:
+                req = self.queue.pop(0)
+                cache = self.model.init_cache(self.cfg, 1, self.max_len)
+                logits, cache = self.model.prefill(
+                    self.params, {"tokens": req.prompt[None, :]}, self.cfg,
+                    cache)
+                tok = int(jnp.argmax(logits[0, -1]))
+                req.out.append(tok)
+                self.active[s] = req
+                self._caches[s] = cache
+
+    def _retire(self, s: int):
+        req = self.active[s]
+        req.done = True
+        self.finished[req.rid] = req
+        self.active[s] = None
+        self._caches[s] = None
+
+    def step(self):
+        """One decode step for every active slot."""
+        self._admit()
+        for s in range(self.slots):
+            req = self.active[s]
+            if req is None:
+                continue
+            cache = self._caches[s]
+            pos = int(cache["pos"])
+            tok = jnp.asarray([[req.out[-1]]], jnp.int32)
+            logits, cache = self._step(self.params, cache, tok,
+                                       jnp.asarray(pos, jnp.int32))
+            nxt = int(jnp.argmax(logits[0, -1]))
+            req.out.append(nxt)
+            self._caches[s] = cache
+            hit_eos = self.eos_id is not None and nxt == self.eos_id
+            if len(req.out) >= req.max_new or hit_eos or \
+                    pos + 1 >= self.max_len:
+                self._retire(s)
+
+    def run(self, max_steps: int = 10_000) -> Dict[int, List[int]]:
+        steps = 0
+        while (self.queue or any(self.active)) and steps < max_steps:
+            self.step()
+            steps += 1
+        return {rid: r.out for rid, r in self.finished.items()}

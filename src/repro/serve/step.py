@@ -1,0 +1,74 @@
+"""Serving steps: prefill and single-token decode (the dry-run targets for
+prefill_32k / decode_32k / long_500k)."""
+from __future__ import annotations
+
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.strategy import Strategy
+from repro.models import get_model
+
+
+def make_prefill_step(cfg, strategy: Strategy) -> Callable:
+    model = get_model(cfg)
+    n_micro = strategy.microbatches
+
+    def one(params, batch):
+        cache = model.init_cache(cfg, batch["tokens"].shape[0],
+                                 batch["tokens"].shape[1])
+        return model.prefill(params, batch, cfg, cache,
+                             attn_impl=strategy.attn_impl)
+
+    def prefill_step(params, batch):
+        b = batch["tokens"].shape[0]
+        if n_micro <= 1 or b % n_micro != 0:
+            return one(params, batch)
+        # batch-chunked prefill: bounds the transient activation /
+        # MoE-dispatch working set to one chunk (beyond-paper; §Perf).
+        micro = jax.tree.map(
+            lambda x: x.reshape(n_micro, b // n_micro, *x.shape[1:]), batch)
+        logits, caches = jax.lax.map(lambda mb: one(params, mb), micro)
+        # (n, ..., b/n, ...) -> merge the chunked batch dim (dim 0 of
+        # logits; dim 1 of stacked (L, b, ...) cache leaves; pos is scalar)
+        logits = logits.reshape(b, *logits.shape[2:])
+
+        def merge(leaf):
+            if leaf.ndim <= 1:          # pos scalars: identical per chunk
+                return leaf[0]
+            # (n, L, b/n, ...) -> (L, n, b/n, ...) -> (L, b, ...)
+            moved = jnp.moveaxis(leaf, 0, 1)
+            return moved.reshape(moved.shape[0], b, *moved.shape[3:])
+
+        cache = jax.tree.map(merge, caches)
+        return logits, cache
+
+    return prefill_step
+
+
+def make_decode_step(cfg, strategy: Strategy) -> Callable:
+    """serve_step: ONE new token against a cache of seq_len entries."""
+    model = get_model(cfg)
+
+    def decode_step(params, cache, token, pos):
+        return model.decode_step(params, cache, token, pos, cfg)
+
+    return decode_step
+
+
+def greedy_generate(params, cfg, strategy, prompt, steps: int):
+    """Simple greedy loop used by examples/tests (jit per step)."""
+    model = get_model(cfg)
+    b, s = prompt["tokens"].shape
+    cache = model.init_cache(cfg, b, s + steps)
+    logits, cache = model.prefill(params, prompt, cfg, cache)
+    tok = jnp.argmax(logits[:, -1], axis=-1)[:, None].astype(jnp.int32)
+    out = [tok]
+    step_fn = jax.jit(lambda p_, c, t, i: model.decode_step(p_, c, t, i, cfg))
+    for i in range(steps - 1):
+        logits, cache = step_fn(params, cache, tok,
+                                jnp.asarray(s + i, jnp.int32))
+        tok = jnp.argmax(logits[:, -1], axis=-1)[:, None].astype(jnp.int32)
+        out.append(tok)
+    return jnp.concatenate(out, axis=1)

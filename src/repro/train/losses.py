@@ -1,0 +1,23 @@
+"""Loss functions (fp32 accumulation)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def cross_entropy(logits, labels, *, ignore_id: int = -1):
+    """logits (B,S,V), labels (B,S) int32. Mean over non-ignored tokens."""
+    logits = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(logits,
+                             jnp.maximum(labels, 0)[..., None], axis=-1)[..., 0]
+    nll = lse - ll
+    mask = (labels != ignore_id).astype(jnp.float32)
+    return (nll * mask).sum() / jnp.maximum(mask.sum(), 1.0)
+
+
+def token_accuracy(logits, labels, *, ignore_id: int = -1):
+    pred = jnp.argmax(logits, axis=-1)
+    mask = (labels != ignore_id)
+    return (jnp.where(mask, pred == labels, False).sum()
+            / jnp.maximum(mask.sum(), 1))

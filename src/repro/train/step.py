@@ -1,0 +1,96 @@
+"""Training-step builder: forward+backward+optimizer under a Strategy.
+
+``make_train_step(cfg, strategy)`` returns a pure function
+``train_step(params, opt_state, batch) -> (params, opt_state, metrics)``
+suitable for ``jax.jit`` with the shardings from core/sharding.py. Grad
+accumulation over ``strategy.microbatches`` runs as a ``lax.scan`` (fp32
+accumulators), which is also what bounds activation memory for the big
+dry-run shapes (paper Fig. 5d's micro-batching, applied to DP).
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Callable, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.pspec import sharding_rules
+from repro.core.strategy import Strategy
+from repro.models import get_model
+from repro.optim import (adafactor_init, adafactor_update, adamw_init,
+                         adamw_update, clip_by_global_norm, get_optimizer)
+from repro.train.losses import cross_entropy
+
+
+def make_loss_fn(cfg, strategy: Strategy) -> Callable:
+    model = get_model(cfg)
+
+    def loss_fn(params, batch):
+        logits, aux = model.forward(params, batch, cfg,
+                                    remat=strategy.remat,
+                                    attn_impl=strategy.attn_impl)
+        labels = batch.get("labels")
+        if labels is None:
+            labels = jnp.concatenate(
+                [batch["tokens"][:, 1:],
+                 jnp.full_like(batch["tokens"][:, :1], -1)], axis=1)
+        loss = cross_entropy(logits, labels)
+        total = loss + cfg.router_aux_coef * aux
+        return total, {"loss": loss, "aux_loss": aux}
+
+    return loss_fn
+
+
+def init_opt_state(params, strategy: Strategy):
+    init, _ = get_optimizer(strategy.optimizer)
+    return init(params)
+
+
+def make_train_step(cfg, strategy: Strategy, *, lr: float = 3e-4,
+                    max_grad_norm: float = 1.0) -> Callable:
+    loss_fn = make_loss_fn(cfg, strategy)
+    _, opt_update = get_optimizer(strategy.optimizer)
+    n_micro = strategy.microbatches
+
+    def grads_of(params, batch):
+        (_, metrics), grads = jax.value_and_grad(
+            loss_fn, has_aux=True)(params, batch)
+        return grads, metrics
+
+    def train_step(params, opt_state, batch):
+        if n_micro > 1:
+            # split batch dim -> (n_micro, b/n_micro, ...) and accumulate
+            acc_dt = jnp.dtype(strategy.grad_accum_dtype)
+
+            def resh(x):
+                b = x.shape[0]
+                assert b % n_micro == 0, (b, n_micro)
+                return x.reshape(n_micro, b // n_micro, *x.shape[1:])
+
+            micro = jax.tree.map(resh, batch)
+            acc0 = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, acc_dt), params)
+            met0 = {"loss": jnp.zeros((), jnp.float32),
+                    "aux_loss": jnp.zeros((), jnp.float32)}
+
+            def body(carry, mb):
+                acc, met = carry
+                g, m = grads_of(params, mb)
+                acc = jax.tree.map(
+                    lambda a, gi: a + (gi.astype(jnp.float32)
+                                       / n_micro).astype(acc_dt),
+                    acc, g)
+                met = jax.tree.map(lambda a, b_: a + b_ / n_micro, met, m)
+                return (acc, met), None
+
+            (grads, metrics), _ = jax.lax.scan(body, (acc0, met0), micro)
+        else:
+            grads, metrics = grads_of(params, batch)
+
+        grads, gnorm = clip_by_global_norm(grads, max_grad_norm)
+        params, opt_state = opt_update(grads, opt_state, params, lr=lr)
+        metrics = dict(metrics, grad_norm=gnorm)
+        return params, opt_state, metrics
+
+    return train_step

@@ -1,0 +1,10 @@
+import os
+
+# smoke tests and benches must see the REAL device count (1), never 512 —
+# the forced-512 flag belongs exclusively to launch/dryrun.py. Some tests
+# build small multi-device meshes; they request 8 CPU devices explicitly.
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+
+import jax  # noqa: E402
+
+jax.config.update("jax_enable_x64", False)

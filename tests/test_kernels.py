@@ -1,0 +1,171 @@
+"""Per-kernel shape/dtype sweeps against the pure-jnp oracles (interpret
+mode on CPU), plus hypothesis property tests."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from hypothesis import given, settings, strategies as hst
+
+from repro.kernels import ops, ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+# ------------------------------------------------------- flash attention
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("b,s,h,d", [(1, 128, 1, 64), (2, 256, 4, 64),
+                                     (1, 512, 2, 128)])
+@pytest.mark.parametrize("causal,window", [(True, 0), (False, 0),
+                                           (True, 128)])
+def test_flash_attention_sweep(b, s, h, d, dtype, causal, window):
+    key = jax.random.key(0)
+    ks = jax.random.split(key, 3)
+    q = jax.random.normal(ks[0], (b, s, h, d), dtype)
+    k = jax.random.normal(ks[1], (b, s, h, d), dtype)
+    v = jax.random.normal(ks[2], (b, s, h, d), dtype)
+    out = ops.flash_attention(q, k, v, causal=causal, window=window,
+                              block_q=64, block_k=64)
+    expect = ref.flash_attention_ref(q, k, v, causal=causal, window=window)
+    tol = 2e-6 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(out.astype(np.float32),
+                               expect.astype(np.float32), atol=tol, rtol=tol)
+
+
+def test_flash_attention_gqa_repeat():
+    key = jax.random.key(1)
+    q = jax.random.normal(key, (2, 128, 8, 64))
+    k = jax.random.normal(key, (2, 128, 2, 64))
+    v = jax.random.normal(key, (2, 128, 2, 64))
+    out = ops.flash_attention(q, k, v, causal=True, block_q=64, block_k=64)
+    kr = jnp.repeat(k, 4, axis=2)
+    vr = jnp.repeat(v, 4, axis=2)
+    expect = ref.flash_attention_ref(q, kr, vr, causal=True)
+    np.testing.assert_allclose(out, expect, atol=2e-6)
+
+
+@settings(max_examples=10, deadline=None)
+@given(s=hst.sampled_from([128, 256]),
+       d=hst.sampled_from([64, 128]),
+       seed=hst.integers(0, 2**30))
+def test_flash_attention_property(s, d, seed):
+    """Property: rows of the attention output are convex combinations of V
+    rows => output is bounded by V's extrema."""
+    key = jax.random.key(seed)
+    ks = jax.random.split(key, 3)
+    q = jax.random.normal(ks[0], (1, s, 1, d))
+    k = jax.random.normal(ks[1], (1, s, 1, d))
+    v = jax.random.normal(ks[2], (1, s, 1, d))
+    out = ops.flash_attention(q, k, v, causal=True, block_q=64, block_k=64)
+    assert float(out.max()) <= float(v.max()) + 1e-4
+    assert float(out.min()) >= float(v.min()) - 1e-4
+
+
+# ------------------------------------------------------------ fused MLP
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("t,d,f", [(128, 64, 256), (256, 128, 512),
+                                   (512, 256, 256)])
+def test_fused_mlp_sweep(t, d, f, dtype):
+    key = jax.random.key(2)
+    ks = jax.random.split(key, 4)
+    x = jax.random.normal(ks[0], (t, d), dtype)
+    wg = (jax.random.normal(ks[1], (d, f), dtype) * 0.05).astype(dtype)
+    wu = (jax.random.normal(ks[2], (d, f), dtype) * 0.05).astype(dtype)
+    wd = (jax.random.normal(ks[3], (f, d), dtype) * 0.05).astype(dtype)
+    out = ops.fused_mlp(x, wg, wu, wd, block_m=128, block_f=128)
+    expect = ref.fused_mlp_ref(x, wg, wu, wd)
+    tol = 1e-5 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(out.astype(np.float32),
+                               expect.astype(np.float32), atol=tol, rtol=tol)
+
+
+def test_fused_mlp_matches_model_mlp():
+    """The kernel must agree with the model-layer MLP it accelerates."""
+    from repro.models.layers import mlp
+    key = jax.random.key(3)
+    ks = jax.random.split(key, 4)
+    d, f = 64, 128
+    x = jax.random.normal(ks[0], (2, 32, d))
+    p = {"w_gate": jax.random.normal(ks[1], (d, f)) * 0.05,
+         "w_up": jax.random.normal(ks[2], (d, f)) * 0.05,
+         "w_down": jax.random.normal(ks[3], (f, d)) * 0.05}
+    expect = mlp(p, x)
+    out = ops.fused_mlp(x, p["w_gate"], p["w_up"], p["w_down"],
+                        block_m=64, block_f=128)
+    np.testing.assert_allclose(out, expect, atol=1e-5)
+
+
+# ------------------------------------------------------------- SSD scan
+
+@pytest.mark.parametrize("s,h,p,n,chunk", [(128, 2, 32, 16, 32),
+                                           (256, 3, 64, 32, 64),
+                                           (256, 1, 32, 64, 128)])
+def test_ssd_scan_sweep(s, h, p, n, chunk):
+    key = jax.random.key(4)
+    ks = jax.random.split(key, 5)
+    b = 2
+    x = jax.random.normal(ks[0], (b, s, h, p)) * 0.5
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (b, s, h)))
+    A = -jnp.exp(jax.random.normal(ks[2], (h,)))
+    B = jax.random.normal(ks[3], (b, s, n)) * 0.3
+    C = jax.random.normal(ks[4], (b, s, n)) * 0.3
+    out = ops.ssd_scan(x, dt, A, B, C, chunk=chunk)
+    expect = ref.ssd_scan_ref(x, dt, A, B, C)
+    np.testing.assert_allclose(out, expect, atol=1e-4, rtol=1e-4)
+
+
+def test_ssd_scan_matches_model_ssd():
+    """Kernel vs the model's chunked XLA implementation."""
+    from repro.models.ssm import ssd_chunked
+    key = jax.random.key(5)
+    ks = jax.random.split(key, 5)
+    b, s, h, p, n = 1, 128, 2, 32, 16
+    x = jax.random.normal(ks[0], (b, s, h, p)) * 0.5
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (b, s, h)))
+    A = -jnp.exp(jax.random.normal(ks[2], (h,)))
+    B = jax.random.normal(ks[3], (b, s, n)) * 0.3
+    C = jax.random.normal(ks[4], (b, s, n)) * 0.3
+    y_kernel = ops.ssd_scan(x, dt, A, B, C, chunk=32)
+    y_model, _ = ssd_chunked(x, dt, A, B, C, chunk=32)
+    np.testing.assert_allclose(y_kernel, y_model, atol=1e-4, rtol=1e-4)
+
+
+@settings(max_examples=8, deadline=None)
+@given(seed=hst.integers(0, 2**30), chunk=hst.sampled_from([16, 32, 64]))
+def test_ssd_chunk_invariance(seed, chunk):
+    """Property: the chunked SSD result must be independent of chunk size."""
+    key = jax.random.key(seed)
+    ks = jax.random.split(key, 5)
+    b, s, h, p, n = 1, 64, 2, 16, 8
+    x = jax.random.normal(ks[0], (b, s, h, p)) * 0.5
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (b, s, h)))
+    A = -jnp.exp(jax.random.normal(ks[2], (h,)))
+    B = jax.random.normal(ks[3], (b, s, n)) * 0.3
+    C = jax.random.normal(ks[4], (b, s, n)) * 0.3
+    out = ops.ssd_scan(x, dt, A, B, C, chunk=chunk)
+    expect = ref.ssd_scan_ref(x, dt, A, B, C)
+    np.testing.assert_allclose(out, expect, atol=1e-4, rtol=1e-4)
+
+
+def test_flash_attention_gradients():
+    """The kernel's custom VJP must match autodiff through the oracle."""
+    key = jax.random.key(7)
+    ks = jax.random.split(key, 3)
+    b, s, h, d = 1, 128, 2, 64
+    q = jax.random.normal(ks[0], (b, s, h, d))
+    k = jax.random.normal(ks[1], (b, s, h, d))
+    v = jax.random.normal(ks[2], (b, s, h, d))
+
+    def loss_kernel(q, k, v):
+        return (ops.flash_attention(q, k, v, causal=True, block_q=64,
+                                    block_k=64) ** 2).mean()
+
+    def loss_ref(q, k, v):
+        return (ref.flash_attention_ref(q, k, v, causal=True) ** 2).mean()
+
+    gk = jax.grad(loss_kernel, argnums=(0, 1, 2))(q, k, v)
+    gr = jax.grad(loss_ref, argnums=(0, 1, 2))(q, k, v)
+    for a, b_ in zip(gk, gr):
+        np.testing.assert_allclose(a, b_, atol=2e-5, rtol=2e-4)

@@ -1,0 +1,54 @@
+"""Operator-graph IR (paper §3.1.2): analytical FLOPs/params vs the model
+zoo's real counts; balanced pipeline-stage cuts."""
+import jax
+import pytest
+
+from repro.configs import ARCH_NAMES, get_config, get_smoke
+from repro.core.opgraph import build_opgraph
+from repro.models import get_model
+
+
+@pytest.mark.parametrize("arch", ["qwen3-14b", "minitron-4b", "olmoe-1b-7b",
+                                  "mamba2-780m"])
+def test_param_count_matches_initializer(arch):
+    """cfg.param_count() (used by MFU / roofline) must equal the real
+    pytree size from the initializer, on the smoke config."""
+    cfg = get_smoke(arch)
+    params = jax.eval_shape(
+        lambda: get_model(cfg).init(jax.random.key(0), cfg))
+    real = sum(int(l.size) for l in jax.tree.leaves(params))
+    pred = cfg.param_count()
+    assert abs(real - pred) / real < 0.05, (real, pred)
+
+
+@pytest.mark.parametrize("arch", ARCH_NAMES)
+def test_opgraph_builds_and_is_chained(arch):
+    cfg = get_config(arch)
+    g = build_opgraph(cfg, batch=4, seq=512)
+    assert g.total_flops() > 0
+    assert g.total_param_bytes() > 0
+    names = {n.name for n in g.nodes}
+    for a, b in g.edges:
+        assert a in names and b in names
+    assert len(g.edges) == len(g.nodes) - 1      # linear chain
+
+
+def test_balanced_stages_cover_all_layers():
+    cfg = get_config("deepseek-coder-33b")
+    g = build_opgraph(cfg, 4, 512)
+    for p in (2, 4, 8):
+        stages = g.balanced_stages(p)
+        assert len(stages) == p
+        flat = [li for st in stages for li in st]
+        assert sorted(flat) == sorted(set(flat))
+        per = {k: sum(n.flops for n in v)
+               for k, v in g.layer_nodes().items()}
+        loads = [sum(per[li] for li in st) for st in stages if st]
+        assert max(loads) / max(min(loads), 1) < 1.6   # balanced-ish
+
+
+def test_flops_scale_linearly_with_tokens():
+    cfg = get_config("internlm2-20b")
+    f1 = build_opgraph(cfg, 2, 256).total_flops()
+    f2 = build_opgraph(cfg, 4, 256).total_flops()
+    assert f2 == pytest.approx(2 * f1, rel=1e-6)

@@ -1,0 +1,86 @@
+"""Planner + cost model: legality invariants (hypothesis), Korthikanti
+activation-memory numbers, search-method agreement."""
+import pytest
+from hypothesis import given, settings, strategies as hst
+
+from repro.configs import SHAPES, get_config, get_smoke
+from repro.core.costmodel import (Degrees, V5E, activation_bytes_per_layer,
+                                  estimate)
+from repro.core.planner import legal_degrees, plan, SEARCH_METHODS
+
+
+def test_legal_degrees_partition_chips():
+    cfg = get_config("qwen3-14b")
+    shape = SHAPES["train_4k"]
+    for deg in legal_degrees(cfg, shape, 64):
+        assert deg.dp * deg.tp * deg.pp == 64
+        assert shape.global_batch % deg.dp == 0
+        assert (shape.global_batch // deg.dp) % deg.microbatches == 0
+        assert deg.pp <= cfg.num_layers
+
+
+@settings(max_examples=12, deadline=None)
+@given(chips=hst.sampled_from([8, 16, 64, 256]),
+       arch=hst.sampled_from(["qwen3-14b", "olmoe-1b-7b", "mamba2-780m"]))
+def test_estimate_terms_positive_and_finite(chips, arch):
+    cfg = get_config(arch)
+    shape = SHAPES["train_4k"]
+    for deg in legal_degrees(cfg, shape, chips)[:8]:
+        cb = estimate(cfg, shape, deg, V5E)
+        assert cb.t_compute > 0 and cb.step_time > 0
+        assert cb.t_memory >= 0 and cb.t_collective >= 0
+        assert 0 <= cb.bubble_fraction < 1
+        assert 0 <= cb.mfu <= 2.5   # SSD archs exceed the 6ND proxy
+
+
+def test_more_chips_never_slower():
+    """Scaling out with the best strategy shouldn't increase step time."""
+    cfg = get_config("qwen3-14b")
+    shape = SHAPES["train_4k"]
+    t64 = plan(cfg, shape, 64).cost
+    t256 = plan(cfg, shape, 256).cost
+    assert t256 <= t64 * 1.05
+
+
+def test_korthikanti_formulas():
+    """Paper §5.1: the SP formula at t=1 equals the no-SP formula at t=1,
+    and SP strictly dominates for t>1 (for realistic a·s/h)."""
+    cfg = get_config("qwen3-14b")
+    s, b = 4096, 1
+    base_t1 = activation_bytes_per_layer(cfg, b, s, 1, False)
+    sp_t1 = activation_bytes_per_layer(cfg, b, s, 1, True)
+    # t=1: 10 + 24 + 5as/h == 34 + 5as/h
+    assert base_t1 == pytest.approx(sp_t1)
+    for t in (2, 4, 8, 16):
+        assert (activation_bytes_per_layer(cfg, b, s, t, True)
+                < activation_bytes_per_layer(cfg, b, s, t, False))
+    # SP removes the un-parallelised 10·s·b·h floor:
+    t = 8
+    no_sp = activation_bytes_per_layer(cfg, b, s, t, False)
+    sp = activation_bytes_per_layer(cfg, b, s, t, True)
+    floor = 10 * s * b * cfg.d_model
+    assert no_sp - sp == pytest.approx(floor * (1 - 1 / t), rel=1e-6)
+
+
+@pytest.mark.parametrize("method", list(SEARCH_METHODS))
+def test_search_methods_return_feasible(method):
+    cfg = get_config("minitron-4b")
+    p = plan(cfg, SHAPES["train_4k"], 256, method=method)
+    assert p.fits
+    assert p.degrees.dp * p.degrees.tp * p.degrees.pp == 256
+    assert p.cost > 0
+
+
+def test_search_quality_ordering():
+    """Exhaustive is the floor; dp/mcmc must come within 25%."""
+    cfg = get_config("internlm2-20b")
+    shape = SHAPES["train_4k"]
+    best = plan(cfg, shape, 256, method="exhaustive").cost
+    for m in ("dp", "mcmc"):
+        assert plan(cfg, shape, 256, method=m).cost <= best * 1.25
+
+
+def test_moe_planner_uses_ep():
+    cfg = get_config("olmoe-1b-7b")
+    p = plan(cfg, SHAPES["train_4k"], 256)
+    assert p.degrees.ep == p.degrees.tp

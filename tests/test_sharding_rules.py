@@ -1,0 +1,111 @@
+"""Sharding-rule unit tests: param specs match shapes/divisibility; opt
+state and cache specs derive correctly; ZeRO/FSDP add the data axis."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import ARCH_NAMES, get_smoke
+from repro.core import sharding as shd
+from repro.core.strategy import Strategy
+from repro.models import get_model
+from repro.train.step import init_opt_state
+
+
+def _mesh():
+    return jax.make_mesh((2, 4), ("data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+
+
+def _check_divisible(pspecs, params, mesh):
+    for spec, leaf in zip(jax.tree.leaves(pspecs,
+                                          is_leaf=lambda x: isinstance(x, P)),
+                          jax.tree.leaves(params)):
+        entries = tuple(spec) + (None,) * (leaf.ndim - len(tuple(spec)))
+        for dim, ax in zip(leaf.shape, entries):
+            if ax is None:
+                continue
+            size = np.prod([mesh.shape[a] for a in
+                            (ax if isinstance(ax, tuple) else (ax,))])
+            assert dim % size == 0, (spec, leaf.shape)
+
+
+@pytest.mark.parametrize("arch", ARCH_NAMES)
+@pytest.mark.parametrize("fsdp", [False, True])
+def test_param_specs_divisible(arch, fsdp):
+    cfg = get_smoke(arch)
+    mesh = _mesh()
+    params = jax.eval_shape(
+        lambda: get_model(cfg).init(jax.random.key(0), cfg))
+    st = Strategy(fsdp=fsdp)
+    pspecs = shd.param_pspecs(params, st, mesh)
+    _check_divisible(pspecs, params, mesh)
+
+
+def test_megatron_column_row_pattern():
+    """wq/w_gate column-split, wo/w_down row-split — paper §5.1 exactly."""
+    cfg = get_smoke("qwen3-14b")
+    mesh = _mesh()
+    params = jax.eval_shape(
+        lambda: get_model(cfg).init(jax.random.key(0), cfg))
+    specs = shd.param_pspecs(params, Strategy(), mesh)
+    lp = specs["layers"]
+    assert tuple(lp["attn"]["wq"]) == (None, None, "model")
+    assert tuple(lp["attn"]["wo"]) == (None, "model", None)
+    assert tuple(lp["mlp"]["w_gate"]) == (None, None, "model")
+    assert tuple(lp["mlp"]["w_down"]) == (None, "model", None)
+    assert tuple(specs["embed"]) == ("model", None)
+
+
+def test_moe_expert_parallel_specs():
+    cfg = get_smoke("olmoe-1b-7b")
+    mesh = _mesh()
+    params = jax.eval_shape(
+        lambda: get_model(cfg).init(jax.random.key(0), cfg))
+    specs = shd.param_pspecs(params, Strategy(expert_parallel=True), mesh)
+    assert tuple(specs["layers"]["moe"]["w_gate"]) == (None, "model",
+                                                       None, None)
+    specs_tp = shd.param_pspecs(params, Strategy(expert_parallel=False),
+                                mesh)
+    assert tuple(specs_tp["layers"]["moe"]["w_gate"]) == (None, None,
+                                                          None, "model")
+
+
+def test_zero1_opt_state_adds_data_axis():
+    cfg = get_smoke("minitron-4b")
+    mesh = _mesh()
+    params = get_model(cfg).init(jax.random.key(0), cfg)
+    st = Strategy(zero1=True)
+    opt = init_opt_state(params, st)
+    ospecs = shd.opt_state_pspecs(opt, params, st, mesh)
+    # AdamW m for w_gate: param spec (None,None,'model') + data on dim 1
+    spec = tuple(ospecs["m"]["layers"]["mlp"]["w_gate"])
+    assert "data" in spec and "model" in spec
+
+
+def test_adafactor_state_specs_match_shapes():
+    cfg = get_smoke("kimi-k2-1t-a32b")
+    mesh = _mesh()
+    params = get_model(cfg).init(jax.random.key(0), cfg)
+    st = Strategy(optimizer="adafactor", zero1=True)
+    opt = init_opt_state(params, st)
+    ospecs = shd.opt_state_pspecs(opt, params, st, mesh)
+    for leaf, spec in zip(jax.tree.leaves(opt["vr"]),
+                          jax.tree.leaves(ospecs["vr"],
+                                          is_leaf=lambda x:
+                                          isinstance(x, P))):
+        assert len(tuple(spec)) <= leaf.ndim + 1
+    _check_divisible(ospecs["vr"], opt["vr"], mesh)
+    _check_divisible(ospecs["vc"], opt["vc"], mesh)
+
+
+def test_cache_specs_fallback_to_seq_sharding():
+    """GQA kv_heads=2 can't shard over model=4 -> cache seq dim shards."""
+    cfg = get_smoke("qwen3-14b")   # kv=2 in smoke
+    mesh = _mesh()
+    model = get_model(cfg)
+    cache = jax.eval_shape(lambda: model.init_cache(cfg, 8, 64))
+    specs = shd.cache_pspecs(cache, Strategy(), mesh, batch=8)
+    spec = tuple(specs["kv"]["k"])
+    assert spec[2] == "model" and spec[3] is None  # seq sharded, heads not

@@ -1,0 +1,155 @@
+"""Optimizers, data pipeline, checkpointing, losses, HLO analyzer."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as hst
+
+from repro.data.pipeline import DataConfig, TokenDataset
+from repro.checkpoint import latest_step, load_checkpoint, save_checkpoint
+from repro.optim import (adafactor_init, adafactor_update, adamw_init,
+                         adamw_update, clip_by_global_norm, cosine_lr)
+from repro.train.losses import cross_entropy
+
+
+# ------------------------------------------------------------- optimizers
+
+@pytest.mark.parametrize("opt", ["adamw", "adafactor"])
+def test_optimizer_decreases_quadratic(opt):
+    w = {"a": jnp.array([[3.0, -2.0], [1.5, 4.0]]),
+         "b": jnp.array([5.0, -5.0, 2.0])}
+    init, update = ((adamw_init, adamw_update) if opt == "adamw"
+                    else (adafactor_init, adafactor_update))
+    state = init(w)
+
+    def loss(w):
+        return sum(jnp.sum(x**2) for x in jax.tree.leaves(w))
+
+    l0 = float(loss(w))
+    for _ in range(120):
+        g = jax.grad(loss)(w)
+        w, state = update(g, state, w, lr=5e-2, weight_decay=0.0)
+    assert float(loss(w)) < 0.05 * l0
+
+
+def test_clip_by_global_norm():
+    g = {"x": jnp.ones((4,)) * 100.0}
+    clipped, norm = clip_by_global_norm(g, 1.0)
+    assert float(norm) == pytest.approx(200.0)
+    total = jnp.sqrt(sum(jnp.sum(x**2) for x in jax.tree.leaves(clipped)))
+    assert float(total) == pytest.approx(1.0, rel=1e-4)
+
+
+def test_cosine_lr_schedule():
+    assert float(cosine_lr(0, base_lr=1.0, warmup=10, total=100)) == 0.0
+    assert float(cosine_lr(10, base_lr=1.0, warmup=10, total=100)) \
+        == pytest.approx(1.0)
+    assert float(cosine_lr(100, base_lr=1.0, warmup=10, total=100)) \
+        == pytest.approx(0.1, rel=1e-3)
+
+
+# ------------------------------------------------------------------ loss
+
+def test_cross_entropy_uniform():
+    v = 17
+    logits = jnp.zeros((2, 3, v))
+    labels = jnp.zeros((2, 3), jnp.int32)
+    assert float(cross_entropy(logits, labels)) == pytest.approx(np.log(v),
+                                                                 rel=1e-5)
+
+
+def test_cross_entropy_ignores_masked():
+    logits = jax.random.normal(jax.random.key(0), (1, 4, 11))
+    labels = jnp.array([[1, 2, -1, -1]], jnp.int32)
+    full = cross_entropy(logits, labels)
+    labels2 = jnp.array([[1, 2, 5, 7]], jnp.int32)
+    assert float(full) != pytest.approx(float(cross_entropy(logits,
+                                                            labels2)))
+
+
+# ------------------------------------------------------------------ data
+
+def test_data_determinism_and_shapes():
+    cfg = DataConfig(vocab_size=512, seq_len=64, global_batch=8, seed=3)
+    ds = TokenDataset(cfg)
+    b1, b2 = ds.batch(5), ds.batch(5)
+    np.testing.assert_array_equal(b1["tokens"], b2["tokens"])
+    assert b1["tokens"].shape == (8, 64)
+    assert b1["labels"].shape == (8, 64)
+    np.testing.assert_array_equal(b1["labels"][:, :-1], b1["tokens"][:, 1:])
+    assert (b1["labels"][:, -1] == -1).all()
+    b3 = ds.batch(6)
+    assert not np.array_equal(b1["tokens"], b3["tokens"])
+    assert b1["tokens"].min() >= 0 and b1["tokens"].max() < 512
+
+
+def test_data_has_learnable_motifs():
+    cfg = DataConfig(vocab_size=512, seq_len=128, global_batch=4, seed=0)
+    ds = TokenDataset(cfg)
+    toks = ds.batch(0)["tokens"]
+    # at least one arithmetic run of length >= 8 per row
+    found = 0
+    for row in toks:
+        d = np.diff(row)
+        run, best = 1, 1
+        for i in range(1, len(d)):
+            run = run + 1 if d[i] == d[i - 1] else 1
+            best = max(best, run)
+        found += best >= 8
+    assert found >= 3
+
+
+# ----------------------------------------------------------- checkpoints
+
+def test_checkpoint_roundtrip(tmp_path):
+    tree = {"layers": {"w": np.arange(12, dtype=np.float32).reshape(3, 4),
+                       "b": np.ones((4,), np.float32)},
+            "step": np.asarray(7)}
+    save_checkpoint(tmp_path, 7, tree)
+    assert latest_step(tmp_path) == 7
+    zeros = jax.tree.map(np.zeros_like, tree)
+    restored = load_checkpoint(tmp_path, 7, zeros)
+    for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(restored)):
+        np.testing.assert_array_equal(a, b)
+
+
+def test_checkpoint_shape_mismatch_raises(tmp_path):
+    save_checkpoint(tmp_path, 1, {"w": np.zeros((2, 2))})
+    with pytest.raises(ValueError):
+        load_checkpoint(tmp_path, 1, {"w": np.zeros((3, 3))})
+
+
+# --------------------------------------------------------- HLO analyzer
+
+def test_hlo_analyzer_scan_trip_counts():
+    from repro.launch.hlo_analysis import analyze
+
+    def f(x, w):
+        def body(c, wi):
+            return jnp.tanh(c @ wi), None
+        y, _ = jax.lax.scan(body, x, w)
+        return y
+
+    x = jax.ShapeDtypeStruct((64, 64), jnp.float32)
+    w = jax.ShapeDtypeStruct((5, 64, 64), jnp.float32)
+    comp = jax.jit(f).lower(x, w).compile()
+    s = analyze(comp.as_text())
+    assert s.flops == pytest.approx(2 * 64**3 * 5)
+    assert s.num_while >= 1
+
+
+def test_hlo_analyzer_collectives():
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    from repro.launch.hlo_analysis import analyze
+    mesh = jax.make_mesh((1, 4), ("data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    xs = jax.ShapeDtypeStruct((64, 64), jnp.float32,
+                              sharding=NamedSharding(mesh, P(None, "model")))
+    ws = jax.ShapeDtypeStruct((64, 64), jnp.float32,
+                              sharding=NamedSharding(mesh, P("model", None)))
+    comp = jax.jit(lambda a, b: a @ b,
+                   out_shardings=NamedSharding(mesh, P(None, None))
+                   ).lower(xs, ws).compile()
+    s = analyze(comp.as_text())
+    assert s.collectives.get("all-reduce", 0) == 64 * 64 * 4
+    assert s.collective_bytes_dcn == 0
