@@ -18,6 +18,7 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.core.costmodel import activation_bytes_per_layer
 from repro.configs import get_config
+from repro.launch.mesh import make_mesh
 
 
 def run() -> list:
@@ -44,8 +45,7 @@ def run() -> list:
 
     # (b) measured: 1 layer fwd under jit, with/without SP constraints
     if len(jax.devices()) >= 4:
-        mesh = jax.make_mesh((1, 4), ("data", "model"),
-                             axis_types=(jax.sharding.AxisType.Auto,) * 2)
+        mesh = make_mesh((1, 4), ("data", "model"))
         d, f, tt = 512, 2048, 2048
 
         def block(x, wg, wd, sp):

@@ -10,6 +10,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.pipeline import pipeline_apply, simulate_schedule
+from repro.launch.mesh import make_mesh
 
 
 def run() -> list:
@@ -27,8 +28,7 @@ def run() -> list:
 
     # real pipeline wall time (CPU, 4 fake devices on the pipe axis)
     if len(jax.devices()) >= 4:
-        mesh = jax.make_mesh((1, 4, 1), ("data", "pipe", "model"),
-                             axis_types=(jax.sharding.AxisType.Auto,) * 3)
+        mesh = make_mesh((1, 4, 1), ("data", "pipe", "model"))
         d, mb, stages = 256, 4, 4
         w = jax.random.normal(jax.random.key(0), (stages, d, d)) * 0.1
 

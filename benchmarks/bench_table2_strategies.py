@@ -10,9 +10,16 @@ from __future__ import annotations
 
 import time
 
+from repro.api import Degrees, Plan
 from repro.configs.base import ShapeConfig
-from repro.core.costmodel import A100, Degrees, estimate
+from repro.core.costmodel import A100
 from benchmarks.paper_cases import TABLE2, MEGATRON_1T
+
+
+def _case(cfg, shape, deg, hw) -> Plan:
+    """Published (t, p, d) table rows as executable Plans — the same object
+    the planner's search emits, so summary/row/materialize all apply."""
+    return Plan.from_degrees(cfg, shape, deg, hw, method="table2")
 
 
 def run() -> list:
@@ -20,42 +27,43 @@ def run() -> list:
     for name, cfg, hw, deg, batch, seq, reported in TABLE2:
         t0 = time.perf_counter_ns()
         shape = ShapeConfig("case", seq, batch, "train")
-        cb = estimate(cfg, shape, deg, hw)
+        p = _case(cfg, shape, deg, hw)
         us = (time.perf_counter_ns() - t0) / 1e3
         rep = f" reported={reported}%" if reported else ""
         rows.append({
             "name": f"table2/{name.split(' ')[0]}",
             "us_per_call": round(us, 1),
-            "derived": (f"pred_mfu={cb.mfu * 100:.1f}%{rep} "
-                        f"bubble={cb.bubble_fraction:.3f} "
-                        f"fits={cb.fits}"),
+            "derived": (f"{p.summary(compact=True)} "
+                        f"pred_mfu={p.mfu * 100:.1f}%{rep} "
+                        f"bubble={p.breakdown.bubble_fraction:.3f} "
+                        f"fits={p.fits}"),
         })
 
     # takeaway 1: for the 1T model, t=8 (node) beats t=64 (cross-node) at
     # equal chip count when pipeline takes the rest
     shape = ShapeConfig("case", 2048, 3072, "train")
-    t8 = estimate(MEGATRON_1T, shape,
-                  Degrees(dp=6, tp=8, pp=64, microbatches=32), A100)
-    t64 = estimate(MEGATRON_1T, shape,
-                   Degrees(dp=6, tp=64, pp=8, microbatches=32), A100)
+    t8 = _case(MEGATRON_1T, shape,
+               Degrees(dp=6, tp=8, pp=64, microbatches=32), A100)
+    t64 = _case(MEGATRON_1T, shape,
+                Degrees(dp=6, tp=64, pp=8, microbatches=32), A100)
     rows.append({"name": "table2/takeaway1_tp_in_node",
                  "us_per_call": 0.0,
-                 "derived": (f"t8_step={t8.step_time:.2f}s "
-                             f"t64_step={t64.step_time:.2f}s "
-                             f"holds={t8.step_time < t64.step_time}")})
+                 "derived": (f"t8_step={t8.cost:.2f}s "
+                             f"t64_step={t64.cost:.2f}s "
+                             f"holds={t8.cost < t64.cost}")})
     # takeaway 2: more microbatches shrink the bubble monotonically
-    bs = [estimate(MEGATRON_1T, shape,
-                   Degrees(dp=6, tp=8, pp=64, microbatches=m),
-                   A100).bubble_fraction for m in (8, 16, 32, 64)]
+    bs = [_case(MEGATRON_1T, shape,
+                Degrees(dp=6, tp=8, pp=64, microbatches=m),
+                A100).breakdown.bubble_fraction for m in (8, 16, 32, 64)]
     rows.append({"name": "table2/takeaway2_microbatch_bubble",
                  "us_per_call": 0.0,
                  "derived": f"bubbles={[round(b, 3) for b in bs]} "
                             f"monotone={all(a > b for a, b in zip(bs, bs[1:]))}"})
     # takeaway 3: t*p must make the model fit; d alone does not help memory
-    small_mp = estimate(MEGATRON_1T, shape,
-                        Degrees(dp=384, tp=8, pp=1, microbatches=8), A100)
-    big_mp = estimate(MEGATRON_1T, shape,
-                      Degrees(dp=6, tp=8, pp=64, microbatches=32), A100)
+    small_mp = _case(MEGATRON_1T, shape,
+                     Degrees(dp=384, tp=8, pp=1, microbatches=8), A100)
+    big_mp = _case(MEGATRON_1T, shape,
+                   Degrees(dp=6, tp=8, pp=64, microbatches=32), A100)
     rows.append({"name": "table2/takeaway3_mp_for_memory",
                  "us_per_call": 0.0,
                  "derived": (f"tp8pp1_fits={small_mp.fits} "

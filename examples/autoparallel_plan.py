@@ -5,8 +5,8 @@ the production pod and print the strategy table (paper §4 made concrete).
 """
 import argparse
 
+from repro.api import plan
 from repro.configs import ARCH_NAMES, SHAPES, get_config
-from repro.core.planner import plan
 
 
 def main():
@@ -25,10 +25,7 @@ def main():
         for shape_name in ("train_4k", "prefill_32k"):
             shape = SHAPES[shape_name]
             p = plan(cfg, shape, args.chips, method=args.method)
-            d = p.degrees
-            desc = (f"dp{d.dp} tp{d.tp} pp{d.pp} m{d.microbatches}"
-                    f"{' sp' if d.seq_parallel else ''}"
-                    f"{' ep' + str(d.ep) if d.ep > 1 else ''}")
+            desc = p.summary(compact=True)
             print(f"{arch:24s} {shape_name:12s} {desc:26s} "
                   f"{p.cost:8.3f}s {p.mfu:6.1%} {p.fits}")
 

@@ -1,16 +1,13 @@
-"""Quickstart: build a small dense LM, auto-plan its parallelisation, train
-a few steps, and generate.
+"""Quickstart: build a small dense LM, auto-plan its parallelisation,
+materialize the plan, then train / generate through ONE Session facade —
+the survey's §4 loop (search -> evaluate -> execute) end to end.
 
     PYTHONPATH=src python examples/quickstart.py
 """
 import jax
 
+from repro.api import Session, TrainConfig, plan
 from repro.configs.base import ModelConfig, ShapeConfig
-from repro.core.planner import plan
-from repro.core.strategy import Strategy
-from repro.launch.mesh import make_host_mesh
-from repro.serve.step import greedy_generate
-from repro.train.trainer import TrainConfig, Trainer
 
 
 def main():
@@ -20,22 +17,23 @@ def main():
                       dtype="float32")
 
     # 1) ask the auto-parallelisation planner what it would do on a pod
-    p = plan(cfg, ShapeConfig("train", 2048, 256, "train"), chips=256)
-    d = p.degrees
-    print(f"planner (256 chips): dp={d.dp} tp={d.tp} pp={d.pp} "
-          f"micro={d.microbatches} sp={d.seq_parallel} "
-          f"-> est step {p.cost:.3f}s, MFU {p.mfu:.1%}\n")
+    pod = plan(cfg, ShapeConfig("train", 2048, 256, "train"), chips=256)
+    print(f"planner (256 chips): {pod.summary()}\n")
 
-    # 2) train for real on the local devices
-    mesh = make_host_mesh(model=1)
-    trainer = Trainer(cfg, Strategy(remat=False, dtype="float32"),
-                      mesh, TrainConfig(steps=40, lr=1e-3, log_every=10),
-                      global_batch=8, seq_len=128)
+    # 2) plan for the devices we actually have, materialize it into a
+    #    (Strategy, Mesh) pair, and train for real through the Session
+    host = plan(cfg, ShapeConfig("host", 128, 8, "train"),
+                chips=jax.device_count())
+    session = Session.from_plan(cfg, host, remat=False, microbatches=1,
+                                dtype="float32")
+    trainer = session.train(TrainConfig(steps=40, lr=1e-3, log_every=10),
+                            global_batch=8, seq_len=128)
     trainer.run()
 
-    # 3) greedy-decode a continuation
-    prompt = {"tokens": trainer.data.batch(0)["tokens"][:2, :16]}
-    out = greedy_generate(trainer.params, cfg, Strategy(), prompt, steps=8)
+    # 3) greedy-decode a continuation — the session threads the TRAINED
+    #    params through, no manual param plumbing
+    prompt = trainer.data.batch(0)["tokens"][:2, :16]
+    out = session.generate(prompt, steps=8)
     print("\ngenerated continuation tokens:\n", out)
 
 

@@ -1,32 +1,31 @@
 """Serving example: batched prefill + decode with a KV cache (greedy),
-including a sliding-window variant whose cache stays O(window).
+including a sliding-window variant whose cache stays O(window). Both run
+through the Session facade; the SWA session REUSES the dense session's
+params — param threading is the Session's job, not the caller's.
 
     PYTHONPATH=src python examples/serve_lm.py
 """
 import time
 
 import jax
-import jax.numpy as jnp
 
+from repro.api import Session
 from repro.configs.base import ModelConfig
-from repro.core.strategy import Strategy
 from repro.models import get_model
-from repro.serve.step import greedy_generate
 
 
 def main():
     cfg = ModelConfig(name="serve-demo", arch_type="dense", num_layers=4,
                       d_model=256, num_heads=8, num_kv_heads=4, d_ff=1024,
                       vocab_size=2048, dtype="float32")
-    model = get_model(cfg)
-    params = model.init(jax.random.key(0), cfg)
+    session = Session(cfg)
 
     # batched requests: 8 prompts of 32 tokens, 16 new tokens each
     b, s, new = 8, 32, 16
-    prompt = {"tokens": jax.random.randint(jax.random.key(1), (b, s), 0,
-                                           cfg.vocab_size)}
+    prompt = jax.random.randint(jax.random.key(1), (b, s), 0,
+                                cfg.vocab_size)
     t0 = time.time()
-    out = greedy_generate(params, cfg, Strategy(), prompt, steps=new)
+    out = session.generate(prompt, steps=new)
     dt = time.time() - t0
     print(f"batch={b} prompt={s} decoded={new} tokens "
           f"in {dt:.2f}s -> {b * new / dt:.1f} tok/s")
@@ -37,7 +36,8 @@ def main():
     cache = get_model(swa).init_cache(swa, b, s + new)
     print(f"\nSWA cache ring length: {cache['kv']['k'].shape[2]} "
           f"(vs {s + new} linear) — O(window) decode memory")
-    out2 = greedy_generate(params, swa, Strategy(), prompt, steps=new)
+    swa_session = Session(swa, params=session.params)
+    out2 = swa_session.generate(prompt, steps=new)
     print("SWA sample:", out2[0].tolist())
 
 

@@ -1,17 +1,14 @@
 """End-to-end driver (deliverable b): train a ~100M-parameter dense LM for a
 few hundred steps on the synthetic corpus, with sharding, checkpointing and
-metrics — the full production path at laptop scale.
+metrics — the full production path at laptop scale, behind the Session
+facade.
 
     PYTHONPATH=src python examples/train_lm.py [--steps 300] [--d-model 512]
 """
 import argparse
 
-import jax
-
+from repro.api import Session, Strategy, TrainConfig
 from repro.configs.base import ModelConfig
-from repro.core.strategy import Strategy
-from repro.launch.mesh import make_host_mesh
-from repro.train.trainer import TrainConfig, Trainer
 
 
 def build_config(d_model: int) -> ModelConfig:
@@ -36,14 +33,13 @@ def main():
     print(f"model: {cfg.name} — {n/1e6:.1f}M params, "
           f"{cfg.num_layers}L d={cfg.d_model}")
 
-    mesh = make_host_mesh(model=1)
-    strategy = Strategy(remat=False, microbatches=2, dtype="float32")
+    session = Session(cfg, Strategy(remat=False, microbatches=2,
+                                    dtype="float32"))
     tc = TrainConfig(steps=args.steps, lr=6e-4, log_every=20,
                      checkpoint_every=max(args.steps // 3, 1),
                      checkpoint_dir=args.checkpoint_dir)
-    trainer = Trainer(cfg, strategy, mesh, tc,
-                      global_batch=args.batch, seq_len=args.seq)
-    trainer.maybe_restore()
+    trainer = session.train(tc, global_batch=args.batch, seq_len=args.seq,
+                            restore=True)
     trainer.run()
     first, last = trainer.history[0]["loss"], trainer.history[-1]["loss"]
     print(f"\nloss {first:.3f} -> {last:.3f} "

@@ -1,0 +1,29 @@
+"""repro.api — the public surface of the repro system.
+
+Close the survey's §4 auto-parallelisation loop in three calls:
+
+    from repro.api import Session, plan
+
+    p = plan(cfg, shape, chips=jax.device_count())   # search  (§4)
+    print(p.summary())                               # inspect
+    session = Session.from_plan(cfg, p)              # execute: plan ->
+    session.train(...) / .generate / .serve / .dryrun    # one facade
+
+Everything here is re-exported from the subsystem modules so callers
+depend on ONE import path; the subsystem modules stay importable for
+backwards compatibility.
+"""
+from repro.core.costmodel import Degrees, Hardware, V5E  # noqa: F401
+from repro.core.planner import Plan, plan  # noqa: F401
+from repro.core.strategy import MEGATRON_BASELINE, MEGATRON_SP, Strategy  # noqa: F401
+from repro.launch.mesh import (make_host_mesh, make_mesh,  # noqa: F401
+                               make_pipeline_mesh, make_production_mesh)
+from repro.train.trainer import TrainConfig, Trainer  # noqa: F401
+from repro.api.session import Session  # noqa: F401
+
+__all__ = [
+    "Session", "Plan", "plan", "Strategy", "Degrees", "Hardware", "V5E",
+    "MEGATRON_BASELINE", "MEGATRON_SP", "TrainConfig", "Trainer",
+    "make_mesh", "make_host_mesh", "make_pipeline_mesh",
+    "make_production_mesh",
+]

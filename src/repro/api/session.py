@@ -1,0 +1,228 @@
+"""Session — the unified execution facade.
+
+The survey's §4 loop is: partition the operator graph, evaluate
+strategies, execute the winner. ``repro.core.planner.plan`` does the first
+two; a :class:`Session` does the third. One object owns the
+``(config, strategy, mesh)`` triple plus the params, and exposes every
+execution mode behind it:
+
+    from repro.api import Session, plan
+
+    p = plan(cfg, shape, chips=jax.device_count())
+    session = Session.from_plan(cfg, p)          # plan -> (Strategy, Mesh)
+    trainer = session.train(TrainConfig(steps=100))
+    trainer.run()
+    tokens = session.generate(prompt_tokens, steps=16)   # trained params
+    engine = session.serve(slots=4, max_len=256)
+    record = session.dryrun("train_4k")          # lower+compile, no alloc
+
+Params thread through: ``generate``/``serve`` after ``train`` see the
+trained weights; ``restore``/``save`` give the Session checkpoint
+ownership so callers never juggle param trees themselves.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Union
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import latest_step, load_checkpoint, save_checkpoint
+from repro.configs.base import ModelConfig, ShapeConfig, SHAPES
+from repro.core.planner import Plan
+from repro.core.pspec import sharding_rules
+from repro.core.strategy import Strategy
+from repro.launch.mesh import make_host_mesh
+from repro.serve.engine import ServeEngine
+from repro.serve.step import greedy_generate
+from repro.train.trainer import (TrainConfig, Trainer, init_sharded_params)
+
+ShapeLike = Union[str, ShapeConfig]
+
+
+class Session:
+    """One (config, strategy, mesh) triple, every execution mode."""
+
+    def __init__(self, cfg: ModelConfig, strategy: Optional[Strategy] = None,
+                 mesh=None, *, params=None, seed: int = 0):
+        self.cfg = cfg
+        self.strategy = strategy if strategy is not None else \
+            Strategy(dtype=cfg.dtype)
+        self.mesh = mesh if mesh is not None else make_host_mesh(model=1)
+        self.seed = seed
+        self._params = params
+        self._trainer: Optional[Trainer] = None
+
+    @classmethod
+    def from_plan(cls, cfg: ModelConfig, plan: Plan, *,
+                  devices: Union[None, int, list] = None, seed: int = 0,
+                  **strategy_overrides) -> "Session":
+        """Materialize a planner Plan and build the Session on it — the
+        search-to-execution hand-off (GSPMD/Alpa shape). Strategy-field
+        overrides (``dtype="float32"``, ``remat=False``, ...) pass
+        through to :meth:`Plan.materialize`."""
+        strategy, mesh = plan.materialize(devices=devices,
+                                          **strategy_overrides)
+        return cls(cfg, strategy, mesh, seed=seed)
+
+    # ------------------------------------------------------------- params
+    @property
+    def params(self):
+        """Current param tree. Lazily initialised (sharded onto the mesh);
+        after ``train`` this is the TRAINED tree, not the init one."""
+        if self._trainer is not None:
+            self._params = self._trainer.params
+        elif self._params is None:
+            self._params = init_sharded_params(self.cfg, self.strategy,
+                                               self.mesh, seed=self.seed)
+        return self._params
+
+    @params.setter
+    def params(self, value):
+        self._trainer = None
+        self._params = value
+
+    def restore(self, checkpoint_dir: str) -> Optional[int]:
+        """Load the latest checkpoint under ``checkpoint_dir`` into the
+        session (None if there is none). Returns the restored step."""
+        last = latest_step(checkpoint_dir)
+        if last is not None:
+            self.params = load_checkpoint(checkpoint_dir, last, self.params)
+        return last
+
+    def save(self, checkpoint_dir: str, step: int = 0):
+        return save_checkpoint(checkpoint_dir, step, self.params)
+
+    # -------------------------------------------------------------- train
+    def train(self, train_cfg: Optional[TrainConfig] = None, *,
+              data=None, global_batch: int = 8, seq_len: int = 256,
+              restore: bool = False) -> Trainer:
+        """Build a Trainer on this session's strategy/mesh/params.
+
+        The returned Trainer is live-linked: once created, ``session
+        .params`` tracks its (donated-and-updated) param tree, so a
+        subsequent ``generate``/``serve``/``save`` uses the trained
+        weights. ``restore=True`` resumes from the TrainConfig's
+        checkpoint dir first."""
+        tc = train_cfg or TrainConfig(seed=self.seed)
+        if self._trainer is not None:
+            # adopt the previous trainer's (trained) tree so back-to-back
+            # train() calls continue rather than restart
+            self._params = self._trainer.params
+            self._trainer = None
+        # materialize via the property so param init always uses the
+        # SESSION's seed (not the TrainConfig's), independent of whether
+        # .params was read before train()
+        trainer = Trainer(self.cfg, self.strategy, self.mesh, tc, data=data,
+                          global_batch=global_batch, seq_len=seq_len,
+                          params=self.params)
+        self._trainer = trainer
+        if restore:
+            trainer.maybe_restore()
+        return trainer
+
+    # ----------------------------------------------------------- generate
+    def generate(self, prompt, steps: int = 16):
+        """Greedy-decode ``steps`` tokens. ``prompt`` is a (b, s) or (s,)
+        int array of token ids, or a full model batch dict."""
+        if isinstance(prompt, dict):
+            batch = prompt
+        else:
+            arr = jnp.asarray(np.asarray(prompt), jnp.int32)
+            if arr.ndim == 1:
+                arr = arr[None, :]
+            batch = {"tokens": arr}
+        return greedy_generate(self.params, self.cfg, self.strategy, batch,
+                               steps=steps)
+
+    # -------------------------------------------------------------- serve
+    def serve(self, *, slots: int = 4, max_len: int = 256,
+              eos_id: Optional[int] = None) -> ServeEngine:
+        """Continuous-batching engine over this session's params."""
+        return ServeEngine(self.cfg, self.params, slots=slots,
+                           max_len=max_len, eos_id=eos_id)
+
+    # ------------------------------------------------------------- dryrun
+    def dryrun(self, shape: ShapeLike, *, verbose: bool = False,
+               arch: Optional[str] = None, mesh_name: Optional[str] = None
+               ) -> Dict[str, Any]:
+        """Lower + compile the step for ``shape`` on this session's mesh
+        WITHOUT allocating params, and report memory/roofline analysis —
+        the production what-if check behind ``launch/dryrun.py``."""
+        rec, _ = self.lower(shape, verbose=verbose, arch=arch,
+                            mesh_name=mesh_name)
+        return rec
+
+    def lower(self, shape: ShapeLike, *, verbose: bool = False,
+              arch: Optional[str] = None, mesh_name: Optional[str] = None):
+        """Like :meth:`dryrun` but also returns the compiled executable."""
+        import time
+
+        from repro.launch import roofline as rl
+        from repro.launch import specs as sp
+        from repro.serve.step import make_decode_step, make_prefill_step
+        from repro.train.step import make_train_step
+
+        shape = SHAPES[shape] if isinstance(shape, str) else shape
+        cfg, strategy, mesh = self.cfg, self.strategy, self.mesh
+        arch = arch or cfg.name
+        mesh_name = mesh_name or "x".join(
+            f"{mesh.shape[a]}{a}" for a in mesh.axis_names)
+        chips = mesh.size
+        t0 = time.time()
+
+        with sharding_rules(mesh, strategy.rules(mesh)):
+            if shape.kind == "train":
+                step = make_train_step(cfg, strategy)
+                args, in_sh = sp.train_specs(cfg, shape, mesh, strategy)
+                jitted = jax.jit(step, in_shardings=in_sh,
+                                 out_shardings=(in_sh[0], in_sh[1], None),
+                                 donate_argnums=(0, 1))
+                mf = rl.model_flops_train(cfg,
+                                          shape.global_batch * shape.seq_len)
+            elif shape.kind == "prefill":
+                step = make_prefill_step(cfg, strategy)
+                args, in_sh = sp.prefill_specs(cfg, shape, mesh, strategy)
+                jitted = jax.jit(step, in_shardings=in_sh)
+                mf = rl.model_flops_decode(cfg,
+                                           shape.global_batch * shape.seq_len)
+            else:  # decode: ONE token against a seq_len cache
+                step = make_decode_step(cfg, strategy)
+                args, in_sh = sp.decode_specs(cfg, shape, mesh, strategy)
+                jitted = jax.jit(step, in_shardings=in_sh,
+                                 donate_argnums=(1,))
+                mf = rl.model_flops_decode(cfg, shape.global_batch)
+            with mesh:
+                lowered = jitted.lower(*args)
+                compiled = lowered.compile()
+
+        roof = rl.extract(compiled, arch=arch, shape=shape.name,
+                          mesh_name=mesh_name, chips=chips, model_flops=mf)
+        mem = compiled.memory_analysis()
+        rec = {
+            "arch": arch, "shape": shape.name, "mesh": mesh_name,
+            "status": "ok", "strategy": strategy.name,
+            "strategy_detail": {
+                "seq_parallel": strategy.seq_parallel,
+                "fsdp": strategy.fsdp,
+                "optimizer": strategy.optimizer,
+                "microbatches": strategy.microbatches,
+                "remat": strategy.remat, "attn_impl": strategy.attn_impl},
+            "compile_s": round(time.time() - t0, 1),
+            "memory_analysis": {
+                k: getattr(mem, k, None) for k in
+                ("argument_size_in_bytes", "output_size_in_bytes",
+                 "temp_size_in_bytes", "generated_code_size_in_bytes",
+                 "alias_size_in_bytes")},
+            "roofline": roof.row(),
+        }
+        if verbose:
+            r = roof.row()
+            print(f"[{arch} x {shape.name} x {mesh_name}] compile "
+                  f"{rec['compile_s']}s  bottleneck={r['bottleneck']} "
+                  f"t_comp={r['t_compute_s']:.3e} t_mem={r['t_memory_s']:.3e} "
+                  f"t_coll={r['t_collective_s']:.3e} "
+                  f"useful={r['useful_ratio']:.2f} "
+                  f"mem/dev={r['mem_per_device_gb']:.2f}GB", flush=True)
+        return rec, compiled

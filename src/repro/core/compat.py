@@ -1,0 +1,24 @@
+"""Version tolerance for the jax API surface this repo leans on.
+
+The codebase targets current jax (``jax.shard_map``, ``check_vma``,
+``AxisType``) but must also run on 0.4.x images where shard_map still
+lives under ``jax.experimental`` and the replication check is spelled
+``check_rep``. Mesh construction compat lives in ``repro.launch.mesh``.
+"""
+from __future__ import annotations
+
+import jax
+
+try:
+    _shard_map = jax.shard_map
+    _CHECK_KW = "check_vma"
+except AttributeError:                          # jax < 0.5
+    from jax.experimental.shard_map import shard_map as _shard_map
+    _CHECK_KW = "check_rep"
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, check_vma=None):
+    """jax.shard_map across versions (check_vma <-> check_rep rename)."""
+    kw = {} if check_vma is None else {_CHECK_KW: check_vma}
+    return _shard_map(f, mesh=mesh, in_specs=in_specs,
+                      out_specs=out_specs, **kw)

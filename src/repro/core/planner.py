@@ -19,15 +19,24 @@ from __future__ import annotations
 import dataclasses
 import random
 from dataclasses import dataclass, field
-from typing import List, Optional, Tuple
+from typing import List, Optional, Sequence, Tuple, Union
 
 from repro.configs.base import ModelConfig, ShapeConfig
-from repro.core.costmodel import Degrees, Hardware, V5E, estimate
+from repro.core.costmodel import (CostBreakdown, Degrees, Hardware, V5E,
+                                  estimate)
 from repro.core.opgraph import build_opgraph
 
 
 @dataclass
 class Plan:
+    """A searched (or hand-specified) parallelisation strategy.
+
+    Plans are EXECUTABLE: ``materialize(devices=...)`` turns the abstract
+    ``Degrees`` into a validated ``(Strategy, Mesh)`` pair that
+    ``repro.api.Session`` (and the launch drivers) run directly — the
+    GSPMD/Alpa shape where one plan object flows from search into
+    execution instead of dead-ending in a report.
+    """
     degrees: Degrees
     cost: float                  # estimated step time (s)
     mfu: float
@@ -35,12 +44,99 @@ class Plan:
     evaluations: int
     method: str
     stage_layers: Optional[List[List[int]]] = None
+    breakdown: Optional[CostBreakdown] = None   # full cost-model terms
 
     def row(self) -> dict:
         d = dataclasses.asdict(self)
         d["degrees"] = dataclasses.asdict(self.degrees)
         d.pop("stage_layers")
+        d.pop("breakdown")
         return d
+
+    @classmethod
+    def from_degrees(cls, cfg: ModelConfig, shape: ShapeConfig,
+                     deg: Degrees, hw: Hardware = V5E, *,
+                     method: str = "manual") -> "Plan":
+        """Wrap hand-picked degrees (paper tables, ablations) as a Plan so
+        they share summary/materialize/row with searched plans."""
+        cb = estimate(cfg, shape, deg, hw)
+        return cls(degrees=deg, cost=cb.step_time, mfu=cb.mfu, fits=cb.fits,
+                   evaluations=1, method=method, breakdown=cb)
+
+    def summary(self, *, compact: bool = False) -> str:
+        """Canonical pretty-printer (replaces the per-caller hand
+        formatting in launch/train.py and the examples)."""
+        d = self.degrees
+        desc = (f"dp{d.dp} tp{d.tp} pp{d.pp} m{d.microbatches}"
+                f"{' sp' if d.seq_parallel else ''}"
+                f"{' ep' + str(d.ep) if d.ep > 1 else ''}")
+        if compact:
+            return desc
+        return (f"plan[{self.method}] {desc} -> est {self.cost:.3f}s/step, "
+                f"MFU {self.mfu:.1%}, fits={self.fits} "
+                f"({self.evaluations} evals)")
+
+    def materialize(self, devices: Union[None, int, Sequence] = None,
+                    **strategy_overrides):
+        """Turn the plan into an executable ``(Strategy, Mesh)`` pair.
+
+        ``devices``: None (all local jax devices), an int (the first N
+        local devices), or an explicit device sequence. The degrees must
+        exactly tile the device count (dp*pp*tp == len(devices)) — the
+        legality check that keeps a searched plan from silently running on
+        the wrong mesh. ``pp > 1`` yields a three-axis
+        ("data", "pipe", "model") mesh for core/pipeline.py; otherwise the
+        standard ("data", "model") layout.
+
+        Extra keyword arguments override Strategy fields (e.g.
+        ``dtype="float32"``, ``remat=False`` for CPU smoke runs).
+        """
+        import jax
+
+        from repro.core.strategy import Strategy
+        from repro.launch.mesh import make_mesh
+
+        if devices is None:
+            devs = list(jax.devices())
+        elif isinstance(devices, int):
+            devs = list(jax.devices())
+            if devices > len(devs):
+                raise ValueError(
+                    f"plan asked for {devices} devices but only "
+                    f"{len(devs)} are available")
+            devs = devs[:devices]
+        else:
+            devs = list(devices)
+
+        d = self.degrees
+        need = d.dp * d.pp * d.tp
+        if need != len(devs):
+            raise ValueError(
+                f"degrees dp{d.dp} x pp{d.pp} x tp{d.tp} = {need} chips "
+                f"do not tile the {len(devs)} provided device(s); re-plan "
+                f"with chips={len(devs)} or pass a matching device slice")
+        if d.ep > 1 and d.tp % d.ep != 0 and d.ep % d.tp != 0:
+            raise ValueError(
+                f"expert-parallel degree ep{d.ep} must share the model "
+                f"axis with tp{d.tp}")
+
+        if d.pp > 1:
+            mesh = make_mesh((d.dp, d.pp, d.tp), ("data", "pipe", "model"),
+                             devices=devs)
+        else:
+            mesh = make_mesh((d.dp, d.tp), ("data", "model"), devices=devs)
+
+        strategy = Strategy(
+            name=f"plan/{self.method}",
+            seq_parallel=d.seq_parallel,
+            zero1=d.zero1,
+            fsdp=d.fsdp,
+            remat=d.remat,
+            microbatches=d.microbatches,
+        )
+        if strategy_overrides:
+            strategy = strategy.with_(**strategy_overrides)
+        return strategy, mesh
 
 
 def _divisors(n: int) -> List[int]:
@@ -91,7 +187,8 @@ def search_exhaustive(cfg, shape, chips: int, hw: Hardware = V5E) -> Plan:
             best = (c, deg)
             best_cb = cb
     return Plan(degrees=best[1], cost=best_cb.step_time, mfu=best_cb.mfu,
-                fits=best_cb.fits, evaluations=n, method="exhaustive")
+                fits=best_cb.fits, evaluations=n, method="exhaustive",
+                breakdown=best_cb)
 
 
 def search_dp(cfg, shape, chips: int, hw: Hardware = V5E) -> Plan:
@@ -124,7 +221,7 @@ def search_dp(cfg, shape, chips: int, hw: Hardware = V5E) -> Plan:
                 best, best_cb, best_stages = (c, deg), cb, stages
     return Plan(degrees=best[1], cost=best_cb.step_time, mfu=best_cb.mfu,
                 fits=best_cb.fits, evaluations=n, method="dp",
-                stage_layers=best_stages)
+                stage_layers=best_stages, breakdown=best_cb)
 
 
 def search_mcmc(cfg, shape, chips: int, hw: Hardware = V5E, *,
@@ -148,7 +245,8 @@ def search_mcmc(cfg, shape, chips: int, hw: Hardware = V5E, *,
         if c < best[0]:
             best, best_cb = (c, cand), cb
     return Plan(degrees=best[1], cost=best_cb.step_time, mfu=best_cb.mfu,
-                fits=best_cb.fits, evaluations=n, method="mcmc")
+                fits=best_cb.fits, evaluations=n, method="mcmc",
+                breakdown=best_cb)
 
 
 SEARCH_METHODS = {"exhaustive": search_exhaustive, "dp": search_dp,

@@ -12,22 +12,13 @@ Usage:
 """
 import argparse
 import json
-import time
 import traceback
-from functools import partial
 from pathlib import Path
 
-import jax
-import jax.numpy as jnp
-
+from repro.api import Session
 from repro.configs import (ARCH_NAMES, SHAPES, get_config, long_500k_policy)
-from repro.core.pspec import sharding_rules
 from repro.core.strategy import Strategy
-from repro.launch import roofline as rl
-from repro.launch import specs as sp
 from repro.launch.mesh import make_production_mesh
-from repro.serve.step import make_decode_step, make_prefill_step
-from repro.train.step import make_train_step
 
 OUT_DIR = Path(__file__).resolve().parents[3] / "experiments" / "dryrun"
 
@@ -86,7 +77,11 @@ def choose_strategy(cfg, shape, mesh, *, optimized: bool = False) -> Strategy:
 def lower_one(arch: str, shape_name: str, *, multi_pod: bool = False,
               optimized: bool = False, mesh=None, strategy=None,
               verbose: bool = True):
-    """Returns (record dict, compiled) or a skip record."""
+    """Returns (record dict, compiled) or a skip record.
+
+    Strategy selection + long_500k policy live here; the lower+compile+
+    report machinery is ``repro.api.Session.lower`` (shared with every
+    other execution mode)."""
     shape = SHAPES[shape_name]
     cfg, pol = effective_config(arch, shape_name)
     mesh_name = "pod2x16x16" if multi_pod else "pod16x16"
@@ -96,67 +91,15 @@ def lower_one(arch: str, shape_name: str, *, multi_pod: bool = False,
                           "full-attention arch at 500k)"}, None
     if mesh is None:
         mesh = make_production_mesh(multi_pod=multi_pod)
-    chips = mesh.size
     strategy = strategy or choose_strategy(cfg, shape, mesh,
                                            optimized=optimized)
     if optimized and shape.kind == "decode":
         # beyond-paper: context-parallel decode attention (see
         # models/cp_attention.py) for seq-sharded caches
         cfg = cfg.with_(cp_decode=True)
-    t0 = time.time()
-
-    with sharding_rules(mesh, strategy.rules(mesh)):
-        if shape.kind == "train":
-            step = make_train_step(cfg, strategy)
-            args, in_sh = sp.train_specs(cfg, shape, mesh, strategy)
-            jitted = jax.jit(step, in_shardings=in_sh,
-                             out_shardings=(in_sh[0], in_sh[1], None),
-                             donate_argnums=(0, 1))
-            mf = rl.model_flops_train(cfg,
-                                      shape.global_batch * shape.seq_len)
-        elif shape.kind == "prefill":
-            step = make_prefill_step(cfg, strategy)
-            args, in_sh = sp.prefill_specs(cfg, shape, mesh, strategy)
-            jitted = jax.jit(step, in_shardings=in_sh)
-            mf = rl.model_flops_decode(cfg,
-                                       shape.global_batch * shape.seq_len)
-        else:  # decode: ONE token against a seq_len cache
-            step = make_decode_step(cfg, strategy)
-            args, in_sh = sp.decode_specs(cfg, shape, mesh, strategy)
-            jitted = jax.jit(step, in_shardings=in_sh, donate_argnums=(1,))
-            mf = rl.model_flops_decode(cfg, shape.global_batch)
-        with mesh:
-            lowered = jitted.lower(*args)
-            compiled = lowered.compile()
-
-    roof = rl.extract(compiled, arch=arch, shape=shape_name,
-                      mesh_name=mesh_name, chips=chips, model_flops=mf)
-    mem = compiled.memory_analysis()
-    rec = {
-        "arch": arch, "shape": shape_name, "mesh": mesh_name,
-        "status": "ok", "strategy": strategy.name,
-        "strategy_detail": {
-            "seq_parallel": strategy.seq_parallel, "fsdp": strategy.fsdp,
-            "optimizer": strategy.optimizer,
-            "microbatches": strategy.microbatches,
-            "remat": strategy.remat, "attn_impl": strategy.attn_impl},
-        "compile_s": round(time.time() - t0, 1),
-        "memory_analysis": {
-            k: getattr(mem, k, None) for k in
-            ("argument_size_in_bytes", "output_size_in_bytes",
-             "temp_size_in_bytes", "generated_code_size_in_bytes",
-             "alias_size_in_bytes")},
-        "roofline": roof.row(),
-    }
-    if verbose:
-        r = roof.row()
-        print(f"[{arch} x {shape_name} x {mesh_name}] compile "
-              f"{rec['compile_s']}s  bottleneck={r['bottleneck']} "
-              f"t_comp={r['t_compute_s']:.3e} t_mem={r['t_memory_s']:.3e} "
-              f"t_coll={r['t_collective_s']:.3e} "
-              f"useful={r['useful_ratio']:.2f} "
-              f"mem/dev={r['mem_per_device_gb']:.2f}GB", flush=True)
-    return rec, compiled
+    session = Session(cfg, strategy, mesh)
+    return session.lower(shape, verbose=verbose, arch=arch,
+                         mesh_name=mesh_name)
 
 
 def main():

@@ -1,13 +1,29 @@
 """Production meshes. Functions, not module constants — importing this
-module never touches jax device state."""
+module never touches jax device state.
+
+``make_mesh`` is the version-compatible constructor every caller should
+use: newer jax wants explicit ``axis_types`` (Auto) for the sharded-under-
+pjit meshes we build, older jax (< 0.5) has no ``AxisType`` at all.
+"""
 from __future__ import annotations
+
+from typing import Optional, Sequence
 
 import jax
 
 
-def _mk(shape, axes):
-    return jax.make_mesh(shape, axes,
-                         axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+def make_mesh(shape: Sequence[int], axes: Sequence[str], *,
+              devices: Optional[Sequence] = None):
+    """jax.make_mesh across jax versions (with/without AxisType.Auto)."""
+    try:
+        axis_types = (jax.sharding.AxisType.Auto,) * len(axes)
+    except AttributeError:              # jax < 0.5: no AxisType, Auto implied
+        return jax.make_mesh(tuple(shape), tuple(axes), devices=devices)
+    return jax.make_mesh(tuple(shape), tuple(axes), devices=devices,
+                         axis_types=axis_types)
+
+
+_mk = make_mesh                         # backwards-compatible alias
 
 
 def make_production_mesh(*, multi_pod: bool = False):
@@ -20,7 +36,7 @@ def make_production_mesh(*, multi_pod: bool = False):
     """
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return _mk(shape, axes)
+    return make_mesh(shape, axes)
 
 
 def make_host_mesh(*, model: int = 1, data: int = 0):
@@ -28,10 +44,12 @@ def make_host_mesh(*, model: int = 1, data: int = 0):
     n = len(jax.devices())
     if data == 0:
         data = n // model
-    return _mk((data, model), ("data", "model"))
+    return make_mesh((data, model), ("data", "model"))
 
 
-def make_pipeline_mesh(*, data: int, pipe: int, model: int):
+def make_pipeline_mesh(*, data: int, pipe: int, model: int,
+                       devices: Optional[Sequence] = None):
     """Mesh with an explicit inter-operator ("pipe") axis for
     core/pipeline.py — the survey's hybrid dp x pp x tp layout (Table 2)."""
-    return _mk((data, pipe, model), ("data", "pipe", "model"))
+    return make_mesh((data, pipe, model), ("data", "pipe", "model"),
+                     devices=devices)

@@ -1,5 +1,6 @@
 """Serving launcher: spin up the continuous-batching engine on a reduced
-config and stream a synthetic request workload through it.
+config (through ``repro.api.Session`` — the session owns param init) and
+stream a synthetic request workload through it.
 
     PYTHONPATH=src python -m repro.launch.serve --arch qwen3-14b \
         --requests 6 --max-new 12
@@ -9,12 +10,10 @@ from __future__ import annotations
 import argparse
 import time
 
-import jax
 import numpy as np
 
+from repro.api import Session
 from repro.configs import ARCH_NAMES, get_smoke
-from repro.models import get_model
-from repro.serve.engine import ServeEngine
 
 
 def main():
@@ -31,9 +30,8 @@ def main():
         raise SystemExit(f"{args.arch}: the engine drives token-only "
                          "decoders; audio/VLM serving needs the stubbed "
                          "frontends wired into prefill (see serve/step.py)")
-    model = get_model(cfg)
-    params = model.init(jax.random.key(0), cfg)
-    eng = ServeEngine(cfg, params, slots=args.slots, max_len=args.max_len)
+    session = Session(cfg)
+    eng = session.serve(slots=args.slots, max_len=args.max_len)
 
     rng = np.random.default_rng(0)
     for rid in range(args.requests):

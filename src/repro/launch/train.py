@@ -1,7 +1,7 @@
 """Training launcher: ``--arch`` x strategy on the local (or forced-count)
-device mesh. For the production 256/512-chip meshes use dryrun.py; this
-driver actually executes steps (reduced config by default, since the box
-is CPU).
+device mesh, driven through the ``repro.api.Session`` facade. For the
+production 256/512-chip meshes use dryrun.py; this driver actually
+executes steps (reduced config by default, since the box is CPU).
 
     PYTHONPATH=src python -m repro.launch.train --arch qwen3-14b \
         --steps 50 --smoke                        # reduced variant, runs
@@ -11,11 +11,9 @@ from __future__ import annotations
 
 import argparse
 
+from repro.api import Session, Strategy, TrainConfig, plan
 from repro.configs import ARCH_NAMES, SHAPES, get_config, get_smoke
-from repro.core.planner import plan
-from repro.core.strategy import Strategy
 from repro.launch.mesh import make_host_mesh
-from repro.train.trainer import TrainConfig, Trainer
 
 
 def main():
@@ -40,24 +38,21 @@ def main():
     if args.plan:
         cfg = get_config(args.arch)
         p = plan(cfg, SHAPES["train_4k"], 256, method="dp")
-        d = p.degrees
-        print(f"{args.arch}: dp{d.dp} tp{d.tp} pp{d.pp} "
-              f"micro{d.microbatches}{' sp' if d.seq_parallel else ''} "
-              f"-> est {p.cost:.3f}s/step, MFU {p.mfu:.1%}, fits={p.fits}")
+        print(f"{args.arch}: {p.summary()}")
         return
 
     cfg = get_smoke(args.arch).with_(dtype="float32")
     strategy = Strategy(remat=False, microbatches=args.microbatches,
                         seq_parallel=args.seq_parallel, fsdp=args.fsdp,
                         dtype="float32")
-    mesh = make_host_mesh(model=1)
+    session = Session(cfg, strategy, make_host_mesh(model=1))
     tc = TrainConfig(steps=args.steps, lr=args.lr, log_every=10,
                      checkpoint_every=args.steps if args.checkpoint_dir
                      else 0,
                      checkpoint_dir=args.checkpoint_dir or "checkpoints")
-    tr = Trainer(cfg, strategy, mesh, tc, global_batch=args.global_batch,
-                 seq_len=args.seq)
-    tr.run()
+    trainer = session.train(tc, global_batch=args.global_batch,
+                            seq_len=args.seq)
+    trainer.run()
 
 
 if __name__ == "__main__":

@@ -10,12 +10,17 @@ steps (the standard orca/vllm-style outer loop, minus paged KV).
 
 This is deliberately host-side Python around the jitted step — the jitted
 inner step is shape-stable so the engine never recompiles after warmup.
+
+Preferred construction: ``repro.api.Session.serve(slots=..., max_len=...)``
+— the Session supplies the params (freshly initialised, restored from a
+checkpoint, or just trained) so callers never thread param trees by hand.
 """
 from __future__ import annotations
 
 import dataclasses
+from collections import deque
 from dataclasses import dataclass, field
-from typing import Callable, Dict, List, Optional
+from typing import Callable, Deque, Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
@@ -41,7 +46,9 @@ class ServeEngine:
         self.slots = slots
         self.max_len = max_len
         self.eos_id = eos_id
-        self.queue: List[Request] = []
+        # FIFO admission queue: deque so heavy-traffic admission stays O(1)
+        # per pop (a list's pop(0) is O(n) in queued requests)
+        self.queue: Deque[Request] = deque()
         self.active: List[Optional[Request]] = [None] * slots
         self.finished: Dict[int, Request] = {}
         self._caches: List[Optional[dict]] = [None] * slots
@@ -55,7 +62,7 @@ class ServeEngine:
     def _admit(self):
         for s in range(self.slots):
             if self.active[s] is None and self.queue:
-                req = self.queue.pop(0)
+                req = self.queue.popleft()
                 cache = self.model.init_cache(self.cfg, 1, self.max_len)
                 logits, cache = self.model.prefill(
                     self.params, {"tokens": req.prompt[None, :]}, self.cfg,

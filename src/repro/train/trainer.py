@@ -1,6 +1,12 @@
 """Trainer: the end-to-end driver tying data, strategy, sharding,
-train_step, metrics and checkpointing together (used by launch/train.py and
-examples/train_lm.py)."""
+train_step, metrics and checkpointing together.
+
+Preferred entrypoint: ``repro.api.Session.train(...)`` — the Session owns
+param init / checkpoint restore and threads the same params into
+``generate``/``serve``. Constructing a Trainer directly (launch/train.py
+pre-redesign style) still works: with ``params=None`` it initialises its
+own sharded params via ``init_sharded_params``.
+"""
 from __future__ import annotations
 
 import time
@@ -23,6 +29,27 @@ from repro.models import get_model
 from repro.train.step import init_opt_state, make_train_step
 
 
+def init_sharded_params(cfg: ModelConfig, strategy: Strategy, mesh: Mesh,
+                        *, seed: int = 0):
+    """Initialise model params jit-sharded straight onto ``mesh`` per the
+    strategy's rules (no host-side full copy). Used by Trainer and by
+    repro.api.Session so every execution mode shares one init path."""
+    model = get_model(cfg)
+    with sharding_rules(mesh, strategy.rules(mesh)):
+        params = jax.jit(
+            lambda k: model.init(k, cfg),
+            out_shardings=jax.tree.map(
+                lambda s: NamedSharding(mesh, s),
+                shd.param_pspecs(
+                    jax.eval_shape(lambda k: model.init(k, cfg),
+                                   jax.random.key(seed)),
+                    strategy, mesh)),
+        )(jax.random.key(seed))
+    # jit dedups identical constants (e.g. the ln1/ln2 ones-vectors) into
+    # ONE buffer; donation would then see the same buffer twice. Copy.
+    return jax.tree.map(lambda x: x.copy(), params)
+
+
 @dataclass
 class TrainConfig:
     steps: int = 100
@@ -36,29 +63,27 @@ class TrainConfig:
 class Trainer:
     def __init__(self, cfg: ModelConfig, strategy: Strategy, mesh: Mesh,
                  train_cfg: TrainConfig, data: Optional[TokenDataset] = None,
-                 global_batch: int = 8, seq_len: int = 256):
+                 global_batch: int = 8, seq_len: int = 256, params=None):
         self.cfg, self.strategy, self.mesh = cfg, strategy, mesh
         self.tc = train_cfg
         self.data = data or TokenDataset(DataConfig(
             vocab_size=cfg.vocab_size, seq_len=seq_len,
             global_batch=global_batch, seed=train_cfg.seed))
         self.global_batch, self.seq_len = global_batch, seq_len
-        model = get_model(cfg)
 
-        with sharding_rules(mesh, strategy.rules(mesh)):
-            params = jax.jit(
-                lambda k: model.init(k, cfg),
-                out_shardings=jax.tree.map(
-                    lambda s: NamedSharding(mesh, s),
-                    shd.param_pspecs(
-                        jax.eval_shape(lambda k: model.init(k, cfg),
-                                       jax.random.key(train_cfg.seed)),
-                        strategy, mesh)),
-            )(jax.random.key(train_cfg.seed))
-        # jit dedups identical constants (e.g. the ln1/ln2 ones-vectors) into
-        # ONE buffer; donation would then see the same buffer twice. Copy.
-        self.params = jax.tree.map(lambda x: x.copy(), params)
+        if params is None:
+            params = init_sharded_params(cfg, strategy, mesh,
+                                         seed=train_cfg.seed)
+        else:
+            # adamw's fp32 master is an astype no-op alias of the float32
+            # tree it is built from, and the step DONATES opt_state — a
+            # private copy keeps the caller's (e.g. a Session's) buffers
+            # alive
+            params = jax.tree.map(lambda x: x.copy(), params)
         self.opt_state = init_opt_state(params, strategy)
+        # the step donates params AND opt_state: master aliases ``params``
+        # above, so our param tree must be a second, distinct copy
+        self.params = jax.tree.map(lambda x: x.copy(), params)
         step_fn = make_train_step(cfg, strategy, lr=train_cfg.lr)
         psh = jax.tree.map(lambda s: NamedSharding(mesh, s),
                            shd.param_pspecs(params, strategy, mesh))
@@ -68,6 +93,7 @@ class Trainer:
         # ZeRO-1 shards optimizer states differently from the params they
         # mirror — place them explicitly before the first donated step.
         self.opt_state = jax.device_put(self.opt_state, osh)
+        self._osh = osh
         self.batch_sh = batch_shardings(cfg, global_batch, mesh, strategy)
         self._jit_step = jax.jit(step_fn, in_shardings=(psh, osh, None),
                                  out_shardings=(psh, osh, None),
@@ -80,6 +106,14 @@ class Trainer:
         if last is not None:
             self.params = load_checkpoint(self.tc.checkpoint_dir, last,
                                           self.params)
+            # rebuild optimizer state: adamw derives the next params from
+            # its fp32 master, so a master still holding the random init
+            # would silently revert the restore on the first step. Init
+            # from a copy — master must not alias the donated param tree.
+            self.opt_state = jax.device_put(
+                init_opt_state(jax.tree.map(lambda x: x.copy(), self.params),
+                               self.strategy),
+                self._osh)
             self.step = last
         return self.step
 

@@ -1,0 +1,138 @@
+"""repro.api: the plan -> materialize -> Session loop.
+
+Covers the redesign's acceptance points: a searched Plan materializes into
+a validated (Strategy, Mesh) pair (including the pp>1 pipeline mesh),
+illegal degree/device combinations are rejected, and the Session facade
+drives train / generate / serve with params threading through."""
+import jax
+import numpy as np
+import pytest
+
+from repro.api import Degrees, Plan, Session, Strategy, TrainConfig, plan
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.serve.engine import ServeEngine
+
+CFG = ModelConfig(name="api-test", arch_type="dense", num_layers=2,
+                  d_model=128, num_heads=4, num_kv_heads=2, d_ff=256,
+                  vocab_size=128, dtype="float32")
+SHAPE = ShapeConfig("host", 64, 8, "train")
+
+
+def test_materialize_rejects_degrees_that_dont_tile_devices():
+    # conftest forces 8 host devices; dp3 covers 3 chips -> must be refused
+    bad = Plan(degrees=Degrees(dp=3, tp=1, pp=1), cost=0.0, mfu=0.0,
+               fits=True, evaluations=1, method="manual")
+    with pytest.raises(ValueError, match="do not tile"):
+        bad.materialize()
+    with pytest.raises(ValueError, match="do not tile"):
+        bad.materialize(devices=4)
+    over = Plan(degrees=Degrees(dp=2, tp=1, pp=1), cost=0.0, mfu=0.0,
+                fits=True, evaluations=1, method="manual")
+    with pytest.raises(ValueError, match="available"):
+        over.materialize(devices=10 * len(jax.devices()))
+
+
+def test_materialize_pp_plan_builds_pipe_mesh():
+    deg = Degrees(dp=2, tp=2, pp=2, microbatches=2)
+    p = Plan.from_degrees(CFG, SHAPE, deg)
+    strategy, mesh = p.materialize(devices=8)
+    assert "pipe" in mesh.axis_names
+    assert (mesh.shape["data"], mesh.shape["pipe"], mesh.shape["model"]) \
+        == (deg.dp, deg.pp, deg.tp)
+    assert strategy.microbatches == deg.microbatches
+
+
+def test_materialize_single_axis_layout_and_strategy_fields():
+    deg = Degrees(dp=4, tp=2, pp=1, microbatches=2, seq_parallel=True,
+                  remat=False)
+    p = Plan.from_degrees(CFG, SHAPE, deg)
+    strategy, mesh = p.materialize(devices=8, dtype="float32")
+    assert tuple(mesh.axis_names) == ("data", "model")
+    assert (mesh.shape["data"], mesh.shape["model"]) == (4, 2)
+    assert strategy.seq_parallel and not strategy.remat
+    assert strategy.dtype == "float32"      # override passed through
+
+
+def test_plan_summary_formats():
+    p = plan(CFG, SHAPE, chips=8)
+    compact = p.summary(compact=True)
+    assert compact.startswith("dp") and " tp" in compact and " pp" in compact
+    full = p.summary()
+    assert compact in full and "MFU" in full and p.method in full
+
+
+def test_plan_to_session_train_smoke():
+    p = plan(CFG, SHAPE, chips=jax.device_count())
+    session = Session.from_plan(CFG, p, remat=False, microbatches=1,
+                                dtype="float32")
+    trainer = session.train(TrainConfig(steps=3, lr=1e-3, log_every=1),
+                            global_batch=8, seq_len=32)
+    trainer.run()
+    assert trainer.step == 3
+    assert np.isfinite(trainer.history[-1]["loss"])
+    # the session threads the TRAINED params through to generate
+    assert session.params is trainer.params
+    out = session.generate(np.zeros((2, 8), np.int32), steps=4)
+    assert out.shape == (2, 4)
+
+
+def test_caller_params_survive_training():
+    # the train step donates its buffers; the session's own param tree
+    # (and anything the caller holds) must not be collateral damage
+    session = Session(CFG, Strategy(dtype="float32", remat=False))
+    ref = session.params
+    trainer = session.train(TrainConfig(steps=1, lr=1e-3),
+                            global_batch=4, seq_len=16)
+    trainer.run()
+    for leaf in jax.tree.leaves(ref):
+        np.asarray(leaf)                # raises if the buffer was donated
+
+
+def test_second_train_continues_from_trained_params():
+    session = Session(CFG, Strategy(dtype="float32", remat=False))
+    t1 = session.train(TrainConfig(steps=2, lr=1e-3),
+                       global_batch=4, seq_len=16)
+    t1.run()
+    trained = np.asarray(jax.tree.leaves(t1.params)[0]).copy()
+    t2 = session.train(TrainConfig(steps=1, lr=0.0),
+                       global_batch=4, seq_len=16)
+    t2.run()
+    np.testing.assert_allclose(np.asarray(jax.tree.leaves(t2.params)[0]),
+                               trained, atol=1e-6)
+
+
+def test_restore_survives_an_optimizer_step(tmp_path):
+    ckpt = str(tmp_path / "ck")
+    session = Session(CFG, Strategy(dtype="float32", remat=False))
+    t1 = session.train(TrainConfig(steps=2, lr=1e-2, checkpoint_every=2,
+                                   checkpoint_dir=ckpt),
+                       global_batch=4, seq_len=16)
+    t1.run()
+    saved = np.asarray(jax.tree.leaves(t1.params)[0]).copy()
+
+    fresh = Session(CFG, Strategy(dtype="float32", remat=False))
+    t2 = fresh.train(TrainConfig(steps=1, lr=0.0, checkpoint_dir=ckpt),
+                     global_batch=4, seq_len=16, restore=True)
+    assert t2.step == 2
+    t2.run(1)
+    # adamw derives params from its fp32 master — a stale master would
+    # silently revert the restore here
+    np.testing.assert_allclose(np.asarray(jax.tree.leaves(t2.params)[0]),
+                               saved, atol=1e-6)
+
+
+def test_session_serve_matches_direct_engine():
+    session = Session(CFG, Strategy(dtype="float32", remat=False))
+    rng = np.random.default_rng(0)
+    prompts = [rng.integers(0, CFG.vocab_size, size=(n,)).astype(np.int32)
+               for n in (5, 9, 7)]
+
+    eng = session.serve(slots=2, max_len=64)
+    direct = ServeEngine(CFG, session.params, slots=2, max_len=64)
+    for i, pr in enumerate(prompts):
+        eng.submit(i, pr, max_new=6)
+        direct.submit(i, pr, max_new=6)
+    got, want = eng.run(), direct.run()
+    assert set(got) == set(want) == set(range(len(prompts)))
+    for i in want:
+        assert got[i] == want[i]

@@ -4,7 +4,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as hst
+
+pytest.importorskip(
+    "hypothesis", reason="property tests need hypothesis (pip install -e '.[test]')")
+from hypothesis import given, settings, strategies as hst  # noqa: E402
 
 from repro.models.layers import attention, attention_chunked, attention_full
 

@@ -10,6 +10,7 @@ from repro.core import sharding as shd
 from repro.core.pspec import sharding_rules
 from repro.core.strategy import Strategy
 from repro.models import get_model
+from repro.launch.mesh import make_mesh
 
 TOL = 5e-4
 
@@ -27,8 +28,7 @@ def test_cp_decode_matches_reference(mesh_shape):
     lg, cache0 = mod.prefill(params, {"tokens": toks[:, :S - 4]}, cfg, cache)
 
     cfg_cp = cfg.with_(cp_decode=True)
-    mesh = jax.make_mesh(mesh_shape, ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    mesh = make_mesh(mesh_shape, ("data", "model"))
     st = Strategy(remat=False, dtype="float32")
     with sharding_rules(mesh, st.rules(mesh)):
         csh = jax.tree.map(lambda sp: jax.NamedSharding(mesh, sp),
@@ -57,8 +57,7 @@ def test_cp_collective_volume_tiny():
     params = jax.eval_shape(lambda: mod.init(key, cfg))
     B, S = 8, 64
     cache = jax.eval_shape(lambda: mod.init_cache(cfg, B, S))
-    mesh = jax.make_mesh((1, 8), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    mesh = make_mesh((1, 8), ("data", "model"))
     st = Strategy(remat=False, dtype="float32")
     with sharding_rules(mesh, st.rules(mesh)):
         csh = jax.tree.map(lambda sp: jax.NamedSharding(mesh, sp),

@@ -5,7 +5,9 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from hypothesis import given, settings, strategies as hst
+pytest.importorskip(
+    "hypothesis", reason="property tests need hypothesis (pip install -e '.[test]')")
+from hypothesis import given, settings, strategies as hst  # noqa: E402
 
 from repro.kernels import ops, ref
 

@@ -6,13 +6,12 @@ import numpy as np
 import pytest
 
 from repro.core.pipeline import gpipe_spmd, pipeline_apply, simulate_schedule
-from repro.launch.mesh import make_pipeline_mesh
+from repro.launch.mesh import make_mesh, make_pipeline_mesh
 
 
 def test_gpipe_matches_sequential():
     p_stages, m, mb, d = 4, 8, 2, 16
-    mesh = jax.make_mesh((1, 4, 1), ("data", "pipe", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 3)
+    mesh = make_mesh((1, 4, 1), ("data", "pipe", "model"))
     key = jax.random.key(0)
     w = jax.random.normal(key, (p_stages, d, d)) * 0.3
     x = jax.random.normal(jax.random.key(1), (m * mb, d))
@@ -31,8 +30,7 @@ def test_gpipe_matches_sequential():
 def test_gpipe_gradients_flow():
     """The pipeline must be differentiable (training viability)."""
     p_stages, m, mb, d = 2, 4, 2, 8
-    mesh = jax.make_mesh((1, 2, 1), ("data", "pipe", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 3)
+    mesh = make_mesh((1, 2, 1), ("data", "pipe", "model"))
     w = jax.random.normal(jax.random.key(0), (p_stages, d, d)) * 0.3
     x = jax.random.normal(jax.random.key(1), (m * mb, d))
 

@@ -1,7 +1,10 @@
 """Planner + cost model: legality invariants (hypothesis), Korthikanti
 activation-memory numbers, search-method agreement."""
 import pytest
-from hypothesis import given, settings, strategies as hst
+
+pytest.importorskip(
+    "hypothesis", reason="property tests need hypothesis (pip install -e '.[test]')")
+from hypothesis import given, settings, strategies as hst  # noqa: E402
 
 from repro.configs import SHAPES, get_config, get_smoke
 from repro.core.costmodel import (Degrees, V5E, activation_bytes_per_layer,

@@ -11,11 +11,11 @@ from repro.core import sharding as shd
 from repro.core.strategy import Strategy
 from repro.models import get_model
 from repro.train.step import init_opt_state
+from repro.launch.mesh import make_mesh
 
 
 def _mesh():
-    return jax.make_mesh((2, 4), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    return make_mesh((2, 4), ("data", "model"))
 
 
 def _check_divisible(pspecs, params, mesh):

@@ -3,13 +3,17 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as hst
+
+pytest.importorskip(
+    "hypothesis", reason="property tests need hypothesis (pip install -e '.[test]')")
+from hypothesis import given, settings, strategies as hst  # noqa: E402
 
 from repro.data.pipeline import DataConfig, TokenDataset
 from repro.checkpoint import latest_step, load_checkpoint, save_checkpoint
 from repro.optim import (adafactor_init, adafactor_update, adamw_init,
                          adamw_update, clip_by_global_norm, cosine_lr)
 from repro.train.losses import cross_entropy
+from repro.launch.mesh import make_mesh
 
 
 # ------------------------------------------------------------- optimizers
@@ -141,8 +145,7 @@ def test_hlo_analyzer_scan_trip_counts():
 def test_hlo_analyzer_collectives():
     from jax.sharding import NamedSharding, PartitionSpec as P
     from repro.launch.hlo_analysis import analyze
-    mesh = jax.make_mesh((1, 4), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    mesh = make_mesh((1, 4), ("data", "model"))
     xs = jax.ShapeDtypeStruct((64, 64), jnp.float32,
                               sharding=NamedSharding(mesh, P(None, "model")))
     ws = jax.ShapeDtypeStruct((64, 64), jnp.float32,

@@ -9,11 +9,11 @@ import pytest
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.launch.hlo_analysis import analyze
+from repro.launch.mesh import make_mesh
 
 
 def _mesh():
-    return jax.make_mesh((1, 4), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    return make_mesh((1, 4), ("data", "model"))
 
 
 def _counts(compiled):
