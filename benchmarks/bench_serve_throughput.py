@@ -1,0 +1,115 @@
+"""Serve-engine throughput: tokens/s vs. slot count on a tiny config.
+
+The point of the batched slot-table decode is that one engine step costs
+ONE device program regardless of occupancy, so tokens/s should GROW with
+the slot count on a fixed request workload (the per-slot-dispatch engine
+it replaced was flat). Each slot count serves the same workload twice and
+times the second pass, so compile/trace time is excluded.
+
+CLI (JSON output, used by the CI smoke step):
+
+    PYTHONPATH=src:. python benchmarks/bench_serve_throughput.py \
+        --slots 1 2 4 --requests 8 --max-new 8 --json out.json
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models import get_model
+from repro.serve.engine import ServeEngine
+
+TINY = ModelConfig(name="bench-serve", arch_type="dense", num_layers=2,
+                   d_model=128, num_heads=4, num_kv_heads=2, d_ff=256,
+                   vocab_size=256, dtype="float32")
+
+
+def _workload(rng, n_requests):
+    return [rng.integers(0, TINY.vocab_size,
+                         size=(int(rng.integers(4, 13)),)).astype(np.int32)
+            for _ in range(n_requests)]
+
+
+def bench(params, *, slots: int, n_requests: int, max_new: int,
+          max_len: int = 64, seed: int = 0) -> dict:
+    eng = ServeEngine(TINY, params, slots=slots, max_len=max_len)
+    rng = np.random.default_rng(seed)
+    prompts = _workload(rng, n_requests)
+
+    def serve(rid0):
+        for i, p in enumerate(prompts):
+            eng.submit(rid0 + i, p, max_new=max_new)
+        t0 = time.perf_counter()
+        results = eng.run()
+        dt = time.perf_counter() - t0
+        toks = sum(len(results[rid0 + i].out) for i in range(n_requests))
+        return toks, dt
+
+    serve(0)                                   # warm: traces decode+buckets
+    steps0 = eng.stats["decode_steps"]
+    toks, dt = serve(n_requests)               # measured pass, fully traced
+    return {
+        "slots": slots,
+        "requests": n_requests,
+        "tokens": toks,
+        "wall_s": round(dt, 4),
+        "tokens_per_s": round(toks / dt, 1),
+        "decode_steps": eng.stats["decode_steps"] - steps0,
+        "decode_traces": eng.stats["decode_traces"],
+        "prefill_traces": eng.stats["prefill_traces"],
+    }
+
+
+def run() -> list:
+    """Harness entry (benchmarks/run.py CSV convention)."""
+    params = get_model(TINY).init(__import__("jax").random.key(0), TINY)
+    rows = []
+    for slots in (1, 2, 4, 8):
+        r = bench(params, slots=slots, n_requests=8, max_new=8)
+        rows.append({
+            "name": f"serve/throughput_slots{slots}",
+            "us_per_call": round(1e6 * r["wall_s"] / max(r["decode_steps"], 1),
+                                 1),
+            "derived": (f"tok_per_s={r['tokens_per_s']} "
+                        f"decode_steps={r['decode_steps']} "
+                        f"decode_traces={r['decode_traces']}"),
+        })
+    return rows
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--slots", type=int, nargs="+", default=[1, 2, 4, 8])
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--max-new", type=int, default=8)
+    ap.add_argument("--max-len", type=int, default=64)
+    ap.add_argument("--json", type=str, default="",
+                    help="write results to this path (default: stdout)")
+    args = ap.parse_args()
+
+    import jax
+    params = get_model(TINY).init(jax.random.key(0), TINY)
+    results = [bench(params, slots=s, n_requests=args.requests,
+                     max_new=args.max_new, max_len=args.max_len)
+               for s in args.slots]
+    report = {"config": TINY.name, "results": results}
+    out = json.dumps(report, indent=2)
+    if args.json:
+        with open(args.json, "w") as f:
+            f.write(out + "\n")
+        base = results[0]["tokens_per_s"]
+        for r in results:
+            print(f"slots={r['slots']:>2} {r['tokens_per_s']:>8.1f} tok/s "
+                  f"({r['tokens_per_s'] / base:.2f}x, "
+                  f"{r['decode_steps']} decode calls, "
+                  f"{r['decode_traces']} trace)")
+    else:
+        print(out)
+
+
+if __name__ == "__main__":
+    main()

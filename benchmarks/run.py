@@ -9,8 +9,8 @@ import traceback
 def main() -> None:
     from benchmarks import (bench_activation_memory, bench_kernels,
                             bench_mfu_table1, bench_pipeline_bubble,
-                            bench_roofline, bench_table2_strategies,
-                            bench_table3_search)
+                            bench_roofline, bench_serve_throughput,
+                            bench_table2_strategies, bench_table3_search)
     modules = [
         ("table1_mfu", bench_mfu_table1),
         ("table2_strategies", bench_table2_strategies),
@@ -19,6 +19,7 @@ def main() -> None:
         ("korthikanti_activation_memory", bench_activation_memory),
         ("kernels", bench_kernels),
         ("roofline", bench_roofline),
+        ("serve_throughput", bench_serve_throughput),
     ]
     print("name,us_per_call,derived")
     failures = 0

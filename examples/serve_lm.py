@@ -40,6 +40,25 @@ def main():
     out2 = swa_session.generate(prompt, steps=new)
     print("SWA sample:", out2[0].tolist())
 
+    # continuous batching: independent requests at different depths share
+    # ONE batched jitted decode step (the slot table), so the whole run
+    # compiles a single decode program no matter how slots churn
+    import numpy as np
+    eng = session.serve(slots=4, max_len=64)
+    rng = np.random.default_rng(0)
+    for rid in range(6):
+        n = int(rng.integers(4, 20))
+        eng.submit(rid, rng.integers(0, cfg.vocab_size, size=(n,)),
+                   max_new=12)
+    t0 = time.time()
+    results = eng.run()
+    dt = time.time() - t0
+    total = sum(len(r.out) for r in results.values())
+    print(f"\nengine: {len(results)} requests, {total} tokens in {dt:.2f}s "
+          f"({eng.stats['decode_steps']} batched decode calls, "
+          f"{eng.stats['decode_traces']} trace)")
+    print("req 0:", results[0].out)
+
 
 if __name__ == "__main__":
     main()

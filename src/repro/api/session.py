@@ -138,10 +138,16 @@ class Session:
 
     # -------------------------------------------------------------- serve
     def serve(self, *, slots: int = 4, max_len: int = 256,
-              eos_id: Optional[int] = None) -> ServeEngine:
-        """Continuous-batching engine over this session's params."""
+              eos_id: Optional[int] = None, temperature: float = 0.0,
+              seed: Optional[int] = None) -> ServeEngine:
+        """Continuous-batching engine over this session's params: one
+        batched jitted decode advances the whole slot table per step.
+        ``temperature > 0`` switches the on-device sampler from greedy to
+        temperature sampling (seeded from the session seed by default)."""
         return ServeEngine(self.cfg, self.params, slots=slots,
-                           max_len=max_len, eos_id=eos_id)
+                           max_len=max_len, eos_id=eos_id,
+                           temperature=temperature,
+                           seed=self.seed if seed is None else seed)
 
     # ------------------------------------------------------------- dryrun
     def dryrun(self, shape: ShapeLike, *, verbose: bool = False,

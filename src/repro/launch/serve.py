@@ -23,6 +23,8 @@ def main():
     ap.add_argument("--max-new", type=int, default=12)
     ap.add_argument("--slots", type=int, default=2)
     ap.add_argument("--max-len", type=int, default=128)
+    ap.add_argument("--temperature", type=float, default=0.0,
+                    help="0 = greedy; >0 = on-device temperature sampling")
     args = ap.parse_args()
 
     cfg = get_smoke(args.arch).with_(dtype="float32")
@@ -31,7 +33,8 @@ def main():
                          "decoders; audio/VLM serving needs the stubbed "
                          "frontends wired into prefill (see serve/step.py)")
     session = Session(cfg)
-    eng = session.serve(slots=args.slots, max_len=args.max_len)
+    eng = session.serve(slots=args.slots, max_len=args.max_len,
+                        temperature=args.temperature)
 
     rng = np.random.default_rng(0)
     for rid in range(args.requests):
@@ -42,11 +45,14 @@ def main():
     t0 = time.time()
     results = eng.run()
     dt = time.time() - t0
-    total = sum(len(v) for v in results.values())
+    total = sum(len(r.out) for r in results.values())
     print(f"served {len(results)} requests, {total} tokens "
-          f"in {dt:.2f}s ({total / dt:.1f} tok/s, {args.slots} slots)")
+          f"in {dt:.2f}s ({total / dt:.1f} tok/s, {args.slots} slots, "
+          f"{eng.stats['decode_steps']} decode calls, "
+          f"{eng.stats['decode_traces']} decode trace)")
     for rid in sorted(results):
-        print(f"  req {rid}: {results[rid]}")
+        r = results[rid]
+        print(f"  req {rid}{'' if r.done else ' [truncated]'}: {r.out}")
 
 
 if __name__ == "__main__":

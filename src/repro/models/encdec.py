@@ -155,11 +155,16 @@ def prefill(params, batch, cfg, cache, *, attn_impl="auto"):
 
 
 def decode_step(params, cache, token, pos, cfg):
+    """``pos``: scalar (lockstep) or (B,) per-row vector (slot-table)."""
     x = params["tok_embed"][token].astype(jnp.dtype(cfg.dtype))
-    x = x + jax.lax.dynamic_slice_in_dim(
-        sinusoid(cache["kv"]["k"].shape[2], cfg.d_model), pos, 1
-    ).astype(x.dtype)
     w = cache["kv"]["k"].shape[2]
+    pos = jnp.asarray(pos, jnp.int32)
+    pe_table = sinusoid(w, cfg.d_model)
+    if pos.ndim:
+        pe = pe_table[pos][:, None]                     # (B, 1, d)
+    else:
+        pe = jax.lax.dynamic_slice_in_dim(pe_table, pos, 1)
+    x = x + pe.astype(x.dtype)
 
     def body(x, lp_kv):
         lp, kv, xkv = lp_kv

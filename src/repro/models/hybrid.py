@@ -152,12 +152,15 @@ def prefill(params, batch, cfg, cache, *, attn_impl="auto"):
 
 
 def decode_step(params, cache, token, pos, cfg):
+    """``pos``: scalar (lockstep) or (B,) per-row vector (slot-table)."""
     x = params["embed"][token].astype(jnp.dtype(cfg.dtype))
     g, rest = _gl(cfg)
     sp = params["shared"]
     w = cache["kv"]["k"].shape[2]
     ring = cfg.sliding_window > 0 and w == cfg.sliding_window
-    positions = jnp.full((token.shape[0], 1), pos)
+    pos = jnp.asarray(pos, jnp.int32)
+    positions = pos[:, None] if pos.ndim else \
+        jnp.full((token.shape[0], 1), pos)
     e = cfg.hybrid_attn_every
     ssm_g = jax.tree.map(lambda a: a.reshape((g, e) + a.shape[1:]),
                          cache["ssm_g"])
@@ -177,7 +180,7 @@ def decode_step(params, cache, token, pos, cfg):
         h = rmsnorm(x, sp["ln1"], cfg.norm_eps)
         q, k, v = attn_qkv(sp["attn"], h, cfg, positions=positions)
         kv = kvcache.write_kv(kv, k, v, pos, ring=ring, window=w)
-        kpos = kvcache.ring_kpos(pos, w) if ring else None
+        kpos = kvcache.ring_kpos(positions, w) if ring else None
         kv_len = None if ring else jnp.minimum(pos + 1, w)
         ctx = attention(q, kv["k"], kv["v"], causal=True,
                         window=cfg.sliding_window, q_offset=pos,

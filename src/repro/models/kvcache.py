@@ -6,6 +6,26 @@ Two layouts:
   * ring cache (sliding-window archs at long_500k): (B, W, Hkv, D); slot
     ``pos % W``; the slot->absolute-position map is recomputed analytically,
     so memory is O(W) not O(S) — the sub-quadratic carve-in of DESIGN.md §4.
+
+Batched slot-table layout (the serve engine)
+--------------------------------------------
+The batch dim doubles as the SLOT TABLE of the continuous-batching engine:
+row ``b`` of every cache leaf is the private context of one in-flight
+request, and requests sit at *different* depths. ``pos`` is therefore
+allowed to be a per-row **vector** (B,) everywhere below, not just a
+scalar:
+
+  * ``write_kv`` scatters row-wise — ``k[arange(B), pos[b]] = k_new[b]`` —
+    so one device program writes every slot's next token at its own cursor;
+  * ``ring_kpos`` broadcasts over a (B, 1) position to give the per-row
+    slot->absolute map (B, W);
+  * the attention mask (layers.attention_full) takes per-row
+    ``q_offset``/``kv_len``/``kpos`` so each row attends exactly to its own
+    valid prefix.
+
+A model-level ``cache["pos"]`` stays a scalar for the lockstep paths
+(greedy_generate, dry-runs); the engine keeps its own (slots,) vector and
+passes it to ``decode_step`` directly.
 """
 from __future__ import annotations
 
@@ -23,26 +43,37 @@ def ring_slot(pos, window: int):
 
 def ring_kpos(pos, window: int):
     """Absolute position held by each ring slot at time ``pos`` (may be <0
-    for not-yet-filled slots; the attention mask drops those)."""
+    for not-yet-filled slots; the attention mask drops those).
+
+    ``pos`` scalar -> (W,); ``pos`` (B, 1) -> (B, W) per-row maps."""
     i = jnp.arange(window)
     return pos - ((pos - i) % window)
 
 
 def fit_prefill(k, w: int):
     """Fit freshly-computed prefill K or V (B,S,Hkv,D) into a cache of
-    length ``w``.  S >= w: keep the last w (ring layout is consistent when
-    S % w == 0, which holds for all assigned shapes).  S < w: place at the
-    front and zero-pad the tail (linear layout)."""
+    length ``w``.  S >= w: keep the last w, rolled so absolute position
+    ``p`` lands in ring slot ``p % w`` (the invariant ``ring_kpos``
+    assumes — a no-op when S % w == 0, but required for arbitrary prompt
+    lengths).  S < w: place at the front and zero-pad the tail (linear
+    layout, also ring-consistent since p < w)."""
     s = k.shape[1]
     if s >= w:
-        return k[:, -w:]
+        return jnp.roll(k[:, -w:], s % w, axis=1)
     return jnp.pad(k, ((0, 0), (0, w - s), (0, 0), (0, 0)))
 
 
 def write_kv(cache, k_new, v_new, pos, *, ring: bool = False, window: int = 0):
-    """k_new/v_new: (B, 1, Hkv, D); pos: scalar int32."""
+    """k_new/v_new: (B, 1, Hkv, D); pos: scalar int32 (lockstep write at one
+    cursor) or (B,) int32 (per-row cursors — the slot-table scatter)."""
+    pos = jnp.asarray(pos)
     idx = ring_slot(pos, window) if ring else pos
     cache = dict(cache)
-    cache["k"] = cache["k"].at[:, idx].set(k_new[:, 0])
-    cache["v"] = cache["v"].at[:, idx].set(v_new[:, 0])
+    if idx.ndim == 0:
+        cache["k"] = cache["k"].at[:, idx].set(k_new[:, 0])
+        cache["v"] = cache["v"].at[:, idx].set(v_new[:, 0])
+    else:
+        rows = jnp.arange(cache["k"].shape[0])
+        cache["k"] = cache["k"].at[rows, idx].set(k_new[:, 0])
+        cache["v"] = cache["v"].at[rows, idx].set(v_new[:, 0])
     return cache

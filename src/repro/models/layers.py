@@ -82,10 +82,13 @@ def attention_full(q, k, v, *, causal: bool, window: int = 0,
                    kpos: Optional[jnp.ndarray] = None):
     """Reference/small-shape path. q:(B,S,Hq,D) k,v:(B,T,Hkv,D) -> (B,S,Hq,D).
 
-    q_offset: absolute position of q[0] (decode: q_offset = pos).
-    kv_len: optional dynamic valid length of the KV (decode cache fill level).
-    kpos:   optional absolute position per KV slot (ring caches); entries < 0
-            are masked out.
+    q_offset: absolute position of q[0] (decode: q_offset = pos). Scalar, or
+              (B,) for the slot-table decode where every row sits at its own
+              depth.
+    kv_len: optional dynamic valid length of the KV (decode cache fill
+            level); scalar or per-row (B,).
+    kpos:   optional absolute position per KV slot (ring caches); (T,) or
+            per-row (B, T); entries < 0 are masked out.
     """
     b, s, hq, d = q.shape
     t, hkv = k.shape[1], k.shape[2]
@@ -93,18 +96,21 @@ def attention_full(q, k, v, *, causal: bool, window: int = 0,
     scores = jnp.einsum("bshd,bthd->bhst", q, k,
                         preferred_element_type=jnp.float32)
     scores *= 1.0 / np.sqrt(d)
-    qpos = jnp.arange(s) + q_offset
+    # per-row broadcasting: qpos (1|B, S), kpos (1|B, T) -> mask (1|B, S, T)
+    qpos = jnp.asarray(q_offset).reshape(-1, 1) + jnp.arange(s)
     if kpos is None:
         kpos = jnp.arange(t)
-    mask = jnp.ones((s, t), bool)
+    kpos = jnp.asarray(kpos)
+    kpos = kpos[None, :] if kpos.ndim == 1 else kpos
+    mask = jnp.ones((1, s, t), bool)
     if causal:
-        mask &= kpos[None, :] <= qpos[:, None]
+        mask = mask & (kpos[:, None, :] <= qpos[:, :, None])
     if window > 0:
-        mask &= kpos[None, :] > qpos[:, None] - window
+        mask &= kpos[:, None, :] > qpos[:, :, None] - window
     if kv_len is not None:
-        mask &= kpos[None, :] < kv_len
-    mask &= kpos[None, :] >= 0
-    scores = jnp.where(mask[None, None], scores, NEG_INF)
+        mask &= kpos[:, None, :] < jnp.asarray(kv_len).reshape(-1, 1, 1)
+    mask &= kpos[:, None, :] >= 0
+    scores = jnp.where(mask[:, None], scores, NEG_INF)
     probs = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
     return jnp.einsum("bhst,bthd->bshd", probs, v)
 

@@ -74,6 +74,9 @@ def prefill(params, batch, cfg, cache, **_):
 
 
 def decode_step(params, cache, token, pos, cfg):
+    """``pos`` may be scalar or a per-row (B,) vector (slot-table decode);
+    the recurrence itself is position-free, so only the bookkeeping
+    ``cache["pos"] = pos + 1`` changes shape."""
     x = params["embed"][token].astype(jnp.dtype(cfg.dtype))
 
     def body(x, lp_st):

@@ -122,10 +122,16 @@ def init_cache(cfg, batch: int, max_len: int, dtype=None):
     }
 
 
-def prefill(params, batch, cfg, cache, *, attn_impl: str = "auto"):
+def prefill(params, batch, cfg, cache, *, attn_impl: str = "auto",
+            last_pos=None):
     """Run the full prompt, fill the cache, return last-token logits.
 
     For ring (SWA) caches only the last ``window`` positions are retained.
+    ``last_pos`` (scalar or (B,)): index of the last REAL token when the
+    prompt is right-padded to a bucket length — logits are gathered there
+    instead of at position S-1. Padding rows beyond ``last_pos`` are
+    causally invisible to real rows and their (garbage) cache entries stay
+    masked by ``kv_len``/``kpos`` until decode overwrites them.
     """
     tokens = batch["tokens"]
     b, s = tokens.shape
@@ -147,21 +153,31 @@ def prefill(params, batch, cfg, cache, *, attn_impl: str = "auto"):
 
     x, kvs = jax.lax.scan(body, x, params["layers"])
     cache = {"kv": kvs, "pos": jnp.asarray(s, jnp.int32)}
+    if last_pos is not None:
+        last = jnp.broadcast_to(jnp.asarray(last_pos, jnp.int32), (b,))
+        x = x[jnp.arange(b), last][:, None]
+        return _head(params, x, cfg), cache
     return _head(params, x[:, -1:], cfg), cache
 
 
 def decode_step(params, cache, token, pos, cfg):
-    """token: (B,1) int32; pos: scalar int32 (tokens generated so far).
+    """token: (B,1) int32; pos: scalar int32 (tokens generated so far) for
+    the lockstep paths, or a (B,) vector for the slot-table decode — each
+    row then reads/writes its own cursor.
 
     Returns (logits (B,1,V), new cache).
     """
     x = _embed(params, token, cfg)
     w = cache["kv"]["k"].shape[2]
     ring = cfg.sliding_window > 0 and w == cfg.sliding_window
-    positions = jnp.full((token.shape[0], 1), pos)
+    pos = jnp.asarray(pos, jnp.int32)
+    batched_pos = pos.ndim > 0
+    positions = pos[:, None] if batched_pos else \
+        jnp.full((token.shape[0], 1), pos)
 
     from repro.models.cp_attention import cp_available, cp_decode_attention
-    use_cp = cfg.cp_decode and not ring and cp_available(cache["kv"]["k"][0])
+    use_cp = (cfg.cp_decode and not ring and not batched_pos
+              and cp_available(cache["kv"]["k"][0]))
 
     def body(x, lp_kv):
         lp, kv = lp_kv
@@ -173,7 +189,7 @@ def decode_step(params, cache, token, pos, cfg):
                                           window=cfg.sliding_window)
         else:
             kv = kvcache.write_kv(kv, k, v, pos, ring=ring, window=w)
-            kpos = kvcache.ring_kpos(pos, w) if ring else None
+            kpos = kvcache.ring_kpos(positions, w) if ring else None
             kv_len = None if ring else jnp.minimum(pos + 1, w)
             ctx = attention(q, kv["k"], kv["v"], causal=True,
                             window=cfg.sliding_window, q_offset=pos,

@@ -72,7 +72,7 @@ def _self_block(lp, x, cfg, *, attn_impl="auto", positions=None, kv=None,
                                           window=cfg.sliding_window)
     else:
         kv = kvcache.write_kv(kv, k, v, pos, ring=ring, window=w)
-        kpos = kvcache.ring_kpos(pos, w) if ring else None
+        kpos = kvcache.ring_kpos(positions, w) if ring else None
         kv_len = None if ring else jnp.minimum(pos + 1, w)
         ctx = attention(q, kv["k"], kv["v"], causal=True,
                         window=cfg.sliding_window, q_offset=pos,
@@ -191,13 +191,17 @@ def prefill(params, batch, cfg, cache, *, attn_impl="auto"):
 
 
 def decode_step(params, cache, token, pos, cfg):
+    """``pos``: scalar (lockstep) or (B,) per-row vector (slot-table)."""
     from repro.models.cp_attention import cp_available
     x = params["embed"][token].astype(jnp.dtype(cfg.dtype))
     g, rest = _gl(cfg)
     w = cache["kv_g"]["k"].shape[2]
     ring = cfg.sliding_window > 0 and w == cfg.sliding_window
-    use_cp = cfg.cp_decode and not ring and cp_available(cache["kv_g"]["k"][0])
-    positions = jnp.full((token.shape[0], 1), pos)
+    pos = jnp.asarray(pos, jnp.int32)
+    use_cp = (cfg.cp_decode and not ring and not pos.ndim
+              and cp_available(cache["kv_g"]["k"][0]))
+    positions = pos[:, None] if pos.ndim else \
+        jnp.full((token.shape[0], 1), pos)
     e = cfg.cross_attn_every
     kv_g = jax.tree.map(lambda a: a.reshape((g, e) + a.shape[1:]),
                         cache["kv_g"])

@@ -1,15 +1,33 @@
-"""Serving engine: continuous-batching-lite over the decode step.
+"""Serving engine: continuous batching over ONE batched decode step.
 
 A fixed-size slot table (the batch) holds independent requests at
-different generation depths. Because the model-side decode_step takes a
-single scalar ``pos`` (the production dry-run shape), the engine tracks
-per-slot positions and uses the PADDED decode trick: every slot steps with
-the same cache write cursor, but finished/empty slots are masked and their
-sampled tokens discarded. Admission fills free slots from a queue between
-steps (the standard orca/vllm-style outer loop, minus paged KV).
+different generation depths. The whole table advances with a SINGLE
+jitted decode call per engine step: every cache leaf is stacked
+``(layers, slots, ...)``, positions are a per-slot vector, and
+``decode_step`` scatters each row's new KV at its own cursor
+(``cache["k"].at[arange(slots), pos]``) while the attention mask keeps
+each row inside its own valid prefix. Finished/empty slots are masked on
+device — their sampled tokens are zeroed and their cursors frozen — so
+device dispatch per step is O(1) in the number of active slots, not
+O(active_slots) as in the per-slot loop this replaces.
 
-This is deliberately host-side Python around the jitted step — the jitted
-inner step is shape-stable so the engine never recompiles after warmup.
+Admission fills free slots from a FIFO queue between steps (the standard
+orca/vllm-style outer loop, minus paged KV). Prefill pads prompts to
+power-of-two buckets (serve/step.prefill_bucket) so XLA retraces at most
+log2(max_len) prefill shapes instead of one per distinct prompt length;
+the padded rows are causally invisible and their cache entries stay
+masked until decode overwrites them. Sampling (greedy or temperature)
+runs on device inside the same jitted step (serve/sampling.py).
+
+Caveats: MoE archs skip prompt bucketing, and their batched decode can
+differ from single-request decode — capacity-based expert routing couples
+rows of a batch (pad/neighbour tokens consume expert capacity). Dense,
+SSM and hybrid archs are row-independent and token-identical to
+sequential decoding.
+
+``engine.stats`` counts device calls AND traces (``decode_traces`` /
+``prefill_traces`` increment only while tracing), so tests can assert the
+one-program property directly.
 
 Preferred construction: ``repro.api.Session.serve(slots=..., max_len=...)``
 — the Session supplies the params (freshly initialised, restored from a
@@ -17,20 +35,28 @@ checkpoint, or just trained) so callers never thread param trees by hand.
 """
 from __future__ import annotations
 
-import dataclasses
 from collections import deque
 from dataclasses import dataclass, field
-from typing import Callable, Deque, Dict, List, Optional
+from typing import Deque, Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.models import get_model
+from repro.serve.sampling import sample_tokens
+from repro.serve.step import prefill_bucket
+
+#: archs the token-only engine can serve (audio/VLM need their stubbed
+#: frontends wired into prefill; see serve/step.py).
+TOKEN_ONLY_ARCHS = ("dense", "moe", "ssm", "hybrid")
 
 
 @dataclass
 class Request:
+    """One request's lifecycle record; ``run()`` returns these so callers
+    can distinguish completion (``done=True``) from truncation by
+    ``max_steps`` (``done=False`` with partial/empty ``out``)."""
     rid: int
     prompt: np.ndarray                 # (len,) int32
     max_new: int
@@ -40,68 +66,182 @@ class Request:
 
 class ServeEngine:
     def __init__(self, cfg, params, *, slots: int = 4, max_len: int = 256,
-                 eos_id: Optional[int] = None):
+                 eos_id: Optional[int] = None, temperature: float = 0.0,
+                 seed: int = 0):
+        if cfg.arch_type not in TOKEN_ONLY_ARCHS:
+            raise ValueError(
+                f"{cfg.name}: the engine drives token-only decoders "
+                f"({'/'.join(TOKEN_ONLY_ARCHS)}), not {cfg.arch_type}")
         self.cfg, self.params = cfg, params
         self.model = get_model(cfg)
         self.slots = slots
         self.max_len = max_len
         self.eos_id = eos_id
+        self.temperature = temperature
         # FIFO admission queue: deque so heavy-traffic admission stays O(1)
         # per pop (a list's pop(0) is O(n) in queued requests)
         self.queue: Deque[Request] = deque()
         self.active: List[Optional[Request]] = [None] * slots
         self.finished: Dict[int, Request] = {}
-        self._caches: List[Optional[dict]] = [None] * slots
-        self._step = jax.jit(
-            lambda p, c, t, i: self.model.decode_step(p, c, t, i, cfg))
+        self.stats = {"decode_steps": 0, "decode_traces": 0,
+                      "prefills": 0, "prefill_traces": 0}
+        self._rng = jax.random.key(seed)
+        # the slot table: one batched cache, per-slot position vector
+        self._cache = self.model.init_cache(cfg, slots, max_len)
+        self._cache["pos"] = jnp.zeros((slots,), jnp.int32)
+        self._pos = np.zeros(slots, np.int64)    # host mirror: tokens in ctx
+        self._last = np.zeros(slots, np.int64)   # host mirror: last token
+        # bucketing: attention masks make right-padding exact for dense;
+        # MoE capacity routing and the SSM recurrence are perturbed by pad
+        # tokens, so those archs prefill at exact length (retrace per len).
+        self._bucketed = cfg.arch_type == "dense"
+        self._window = (self._cache["kv"]["k"].shape[2]
+                        if "kv" in self._cache else max_len)
+        self._decode = jax.jit(self._decode_fn, donate_argnums=(1,))
+        self._prefill = jax.jit(self._prefill_fn, donate_argnums=(1,))
 
+    # ------------------------------------------------------- jitted steps
+    def _decode_fn(self, params, cache, tokens, pos, active, rng):
+        """ONE device program advancing every slot: batched decode +
+        on-device sampling + active-slot masking."""
+        self.stats["decode_traces"] += 1     # Python side effect: trace-time only
+        logits, cache = self.model.decode_step(params, cache, tokens, pos,
+                                               self.cfg)
+        tok = sample_tokens(logits[:, -1], rng=rng,
+                            temperature=self.temperature)
+        tok = jnp.where(active, tok, 0)
+        cache["pos"] = jnp.where(active, pos + 1, pos)
+        return tok, cache
+
+    def _prefill_fn(self, params, cache, tokens, last_pos, slot, rng):
+        """Prefill one (bucket-padded) prompt, sample its first token, and
+        scatter the fresh per-request cache into slot-table row ``slot``.
+        Retraces once per distinct padded length (= per bucket)."""
+        self.stats["prefill_traces"] += 1
+        c1 = self.model.init_cache(self.cfg, 1, self.max_len)
+        if self._bucketed:
+            logits, c1 = self.model.prefill(params, {"tokens": tokens},
+                                            self.cfg, c1, last_pos=last_pos)
+        else:
+            logits, c1 = self.model.prefill(params, {"tokens": tokens},
+                                            self.cfg, c1)
+        tok = sample_tokens(logits[0, -1], rng=rng,
+                            temperature=self.temperature)
+        out = {}
+        for key, big in cache.items():
+            if key == "pos":
+                out[key] = big.at[slot].set(last_pos + 1)
+            else:
+                out[key] = jax.tree.map(
+                    lambda b, o: b.at[:, slot].set(o[:, 0]), big, c1[key])
+        return tok, out
+
+    def _next_rng(self):
+        if self.temperature <= 0.0:
+            return None
+        self._rng, key = jax.random.split(self._rng)
+        return key
+
+    # --------------------------------------------------------- scheduling
     def submit(self, rid: int, prompt: np.ndarray, max_new: int):
-        self.queue.append(Request(rid, np.asarray(prompt, np.int32),
-                                  max_new))
+        """Queue a request. Rejects inputs the cache cannot hold instead of
+        silently clamping writes into the last row."""
+        prompt = np.asarray(prompt, np.int32).reshape(-1)
+        if prompt.size == 0:
+            raise ValueError(f"request {rid}: empty prompt")
+        if prompt.size >= self.max_len:
+            raise ValueError(
+                f"request {rid}: prompt length {prompt.size} >= max_len "
+                f"{self.max_len}; the longest servable prompt is "
+                f"{self.max_len - 1} tokens")
+        if max_new < 1:
+            raise ValueError(f"request {rid}: max_new must be >= 1")
+        self.queue.append(Request(rid, prompt, int(max_new)))
+
+    def _free_slot(self) -> Optional[int]:
+        for s in range(self.slots):
+            if self.active[s] is None:
+                return s
+        return None
 
     def _admit(self):
-        for s in range(self.slots):
-            if self.active[s] is None and self.queue:
-                req = self.queue.popleft()
-                cache = self.model.init_cache(self.cfg, 1, self.max_len)
-                logits, cache = self.model.prefill(
-                    self.params, {"tokens": req.prompt[None, :]}, self.cfg,
-                    cache)
-                tok = int(jnp.argmax(logits[0, -1]))
-                req.out.append(tok)
+        while self.queue:
+            s = self._free_slot()
+            if s is None:
+                return
+            req = self.queue.popleft()
+            n = len(req.prompt)
+            blen = prefill_bucket(n, cap=self._window) if self._bucketed \
+                else n
+            padded = np.zeros(blen, np.int32)
+            padded[:n] = req.prompt
+            tok, self._cache = self._prefill(
+                self.params, self._cache, jnp.asarray(padded[None]),
+                jnp.asarray(n - 1, jnp.int32), jnp.asarray(s, jnp.int32),
+                self._next_rng())
+            self.stats["prefills"] += 1
+            tok = int(tok)
+            req.out.append(tok)
+            self._pos[s] = n
+            self._last[s] = tok
+            # honor max_new / EOS on the PREFILL-sampled token: a request
+            # that is already complete never occupies a slot, so output
+            # length is exactly min(max_new, tokens-until-EOS)
+            hit_eos = self.eos_id is not None and tok == self.eos_id
+            if req.max_new <= 1 or hit_eos:
+                req.done = True
+                self.finished[req.rid] = req
+            else:
                 self.active[s] = req
-                self._caches[s] = cache
 
     def _retire(self, s: int):
         req = self.active[s]
         req.done = True
         self.finished[req.rid] = req
         self.active[s] = None
-        self._caches[s] = None
 
+    # -------------------------------------------------------------- serve
     def step(self):
-        """One decode step for every active slot."""
+        """Admit from the queue, then advance EVERY active slot with one
+        batched device call (no call at all if the table is empty)."""
         self._admit()
+        mask = np.array([r is not None for r in self.active])
+        if not mask.any():
+            return
+        tok, self._cache = self._decode(
+            self.params, self._cache,
+            jnp.asarray(self._last[:, None], jnp.int32),
+            jnp.asarray(self._pos, jnp.int32), jnp.asarray(mask),
+            self._next_rng())
+        self.stats["decode_steps"] += 1
+        toks = np.asarray(tok)
         for s in range(self.slots):
             req = self.active[s]
             if req is None:
                 continue
-            cache = self._caches[s]
-            pos = int(cache["pos"])
-            tok = jnp.asarray([[req.out[-1]]], jnp.int32)
-            logits, cache = self._step(self.params, cache, tok,
-                                       jnp.asarray(pos, jnp.int32))
-            nxt = int(jnp.argmax(logits[0, -1]))
-            req.out.append(nxt)
-            self._caches[s] = cache
-            hit_eos = self.eos_id is not None and nxt == self.eos_id
+            t = int(toks[s])
+            req.out.append(t)
+            self._pos[s] += 1
+            self._last[s] = t
+            hit_eos = self.eos_id is not None and t == self.eos_id
             if len(req.out) >= req.max_new or hit_eos or \
-                    pos + 1 >= self.max_len:
+                    self._pos[s] >= self.max_len:
                 self._retire(s)
 
-    def run(self, max_steps: int = 10_000) -> Dict[int, List[int]]:
+    def run(self, max_steps: int = 10_000) -> Dict[int, Request]:
+        """Serve until the queue and slot table drain (or ``max_steps``).
+
+        Returns every submitted request's record: completed ones with
+        ``done=True``, still-active ones with their partial output and
+        still-queued ones with ``out == []`` (both ``done=False``) when
+        ``max_steps`` is exhausted — nothing vanishes."""
         steps = 0
-        while (self.queue or any(self.active)) and steps < max_steps:
+        while (self.queue or any(r is not None for r in self.active)) \
+                and steps < max_steps:
             self.step()
             steps += 1
-        return {rid: r.out for rid, r in self.finished.items()}
+        results = dict(self.finished)
+        for req in list(self.active) + list(self.queue):
+            if req is not None:
+                results[req.rid] = req
+        return results

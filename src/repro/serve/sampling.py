@@ -1,0 +1,24 @@
+"""On-device sampling, shared by ``ServeEngine`` and ``greedy_generate``.
+
+One hook so every decode path samples identically: ``temperature <= 0``
+(or no rng) is exact greedy argmax; otherwise temperature-scaled
+categorical sampling via Gumbel-max (``jax.random.categorical``). The hook
+is pure and shape-polymorphic — it runs INSIDE the jitted decode step, so
+sampling costs no extra device dispatch.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def sample_tokens(logits, *, rng: Optional[jax.Array] = None,
+                  temperature: float = 0.0):
+    """logits (..., V) -> sampled token ids (...,) int32."""
+    if temperature <= 0.0 or rng is None:
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    return jax.random.categorical(
+        rng, logits.astype(jnp.float32) / temperature, axis=-1
+    ).astype(jnp.int32)

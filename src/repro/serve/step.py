@@ -1,14 +1,38 @@
 """Serving steps: prefill and single-token decode (the dry-run targets for
-prefill_32k / decode_32k / long_500k)."""
+prefill_32k / decode_32k / long_500k), prompt-length bucketing, and the
+greedy/sampled generate loop."""
 from __future__ import annotations
 
-from typing import Callable
+from typing import Callable, Optional
 
 import jax
 import jax.numpy as jnp
 
 from repro.core.strategy import Strategy
 from repro.models import get_model
+from repro.serve.sampling import sample_tokens
+
+MIN_PREFILL_BUCKET = 8
+
+
+def prefill_bucket(n: int, *, cap: int = 0,
+                   min_bucket: int = MIN_PREFILL_BUCKET) -> int:
+    """Padded prompt length for an ``n``-token prompt: the smallest
+    power of two >= max(n, min_bucket).
+
+    Bucketing bounds the number of distinct prefill shapes — and therefore
+    XLA retraces — to log2(max_len) instead of one per prompt length.
+    ``cap`` > 0 bounds the padded length (the cache window); when even the
+    bucket would overflow it, fall back to the exact length so the cache
+    layout stays consistent (``kvcache.fit_prefill`` would otherwise keep
+    padding rows and drop real ones).
+    """
+    assert n >= 1
+    b = max(n, min_bucket)
+    b = 1 << (b - 1).bit_length()
+    if cap > 0 and b > cap:
+        return n
+    return b
 
 
 def make_prefill_step(cfg, strategy: Strategy) -> Callable:
@@ -57,18 +81,33 @@ def make_decode_step(cfg, strategy: Strategy) -> Callable:
     return decode_step
 
 
-def greedy_generate(params, cfg, strategy, prompt, steps: int):
-    """Simple greedy loop used by examples/tests (jit per step)."""
+def greedy_generate(params, cfg, strategy, prompt, steps: int, *,
+                    temperature: float = 0.0,
+                    rng: Optional[jax.Array] = None):
+    """Simple lockstep generate loop used by examples/tests (jit per step).
+
+    Greedy by default; ``temperature > 0`` (+ ``rng``) samples through the
+    same on-device hook the serve engine uses (serve/sampling.py)."""
     model = get_model(cfg)
     b, s = prompt["tokens"].shape
     cache = model.init_cache(cfg, b, s + steps)
     logits, cache = model.prefill(params, prompt, cfg, cache)
-    tok = jnp.argmax(logits[:, -1], axis=-1)[:, None].astype(jnp.int32)
+    keys = (jax.random.split(rng, steps) if rng is not None
+            else [None] * steps)
+    tok = sample_tokens(logits[:, -1], rng=keys[0],
+                        temperature=temperature)[:, None]
     out = [tok]
-    step_fn = jax.jit(lambda p_, c, t, i: model.decode_step(p_, c, t, i, cfg))
+    step_fn = jax.jit(
+        lambda p_, c, t, i, k: _sampled_decode(model, cfg, p_, c, t, i, k,
+                                               temperature))
     for i in range(steps - 1):
-        logits, cache = step_fn(params, cache, tok,
-                                jnp.asarray(s + i, jnp.int32))
-        tok = jnp.argmax(logits[:, -1], axis=-1)[:, None].astype(jnp.int32)
+        tok, cache = step_fn(params, cache, tok,
+                             jnp.asarray(s + i, jnp.int32), keys[i + 1])
         out.append(tok)
     return jnp.concatenate(out, axis=1)
+
+
+def _sampled_decode(model, cfg, params, cache, tok, pos, rng, temperature):
+    logits, cache = model.decode_step(params, cache, tok, pos, cfg)
+    return sample_tokens(logits[:, -1], rng=rng,
+                         temperature=temperature)[:, None], cache

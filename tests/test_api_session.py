@@ -135,4 +135,5 @@ def test_session_serve_matches_direct_engine():
     got, want = eng.run(), direct.run()
     assert set(got) == set(want) == set(range(len(prompts)))
     for i in want:
-        assert got[i] == want[i]
+        assert got[i].done and want[i].done
+        assert got[i].out == want[i].out

@@ -59,3 +59,25 @@ def test_ring_cache_swa_decode():
                                     jnp.asarray(pos, jnp.int32), cfg)
         err = float(jnp.abs(lg[:, 0] - full[:, pos]).max())
         assert err < TOL, (pos, err)
+
+
+def test_ring_cache_unaligned_prefill():
+    """Prompt length NOT a multiple of the window: fit_prefill must roll
+    the kept rows so ring slot p%w really holds position p, or every
+    post-prefill decode step attends to misaligned keys."""
+    cfg = get_smoke("qwen3-14b").with_(dtype="float32", sliding_window=16)
+    mod = get_model(cfg)
+    key = jax.random.key(5)
+    params = mod.init(key, cfg)
+    B, S, P = 2, 48, 20                       # 16 < P < S, P % 16 != 0
+    toks = jax.random.randint(key, (B, S), 0, cfg.vocab_size)
+    full, _ = mod.forward(params, {"tokens": toks}, cfg)
+    cache = mod.init_cache(cfg, B, S)
+    lg, cache = mod.prefill(params, {"tokens": toks[:, :P]}, cfg, cache)
+    assert float(jnp.abs(lg[:, 0] - full[:, P - 1]).max()) < TOL
+    for i in range(8):
+        pos = P + i
+        lg, cache = mod.decode_step(params, cache, toks[:, pos:pos + 1],
+                                    jnp.asarray(pos, jnp.int32), cfg)
+        err = float(jnp.abs(lg[:, 0] - full[:, pos]).max())
+        assert err < TOL, (pos, err)
