@@ -6,6 +6,12 @@ the slot count on a fixed request workload (the per-slot-dispatch engine
 it replaced was flat). Each slot count serves the same workload twice and
 times the second pass, so compile/trace time is excluded.
 
+Each row also reports ``peak_kv_bytes`` — the engine's resident decode
+state. The dense layout grows it linearly in slots (slots * max_len rows
+whether or not requests are short); the paged layout (--paged) holds one
+shared page pool, sizable via --kv-pages independently of the slot count,
+which is the fragmentation win the paged tests pin down.
+
 CLI (JSON output, used by the CI smoke step):
 
     PYTHONPATH=src:. python benchmarks/bench_serve_throughput.py \
@@ -35,8 +41,10 @@ def _workload(rng, n_requests):
 
 
 def bench(params, *, slots: int, n_requests: int, max_new: int,
-          max_len: int = 64, seed: int = 0) -> dict:
-    eng = ServeEngine(TINY, params, slots=slots, max_len=max_len)
+          max_len: int = 64, seed: int = 0, paged: bool = False,
+          page_size: int = 16, kv_pages=None) -> dict:
+    eng = ServeEngine(TINY, params, slots=slots, max_len=max_len,
+                      paged=paged, page_size=page_size, kv_pages=kv_pages)
     rng = np.random.default_rng(seed)
     prompts = _workload(rng, n_requests)
 
@@ -61,6 +69,8 @@ def bench(params, *, slots: int, n_requests: int, max_new: int,
         "decode_steps": eng.stats["decode_steps"] - steps0,
         "decode_traces": eng.stats["decode_traces"],
         "prefill_traces": eng.stats["prefill_traces"],
+        "paged": eng.paged,
+        "peak_kv_bytes": eng.kv_bytes(),
     }
 
 
@@ -68,16 +78,20 @@ def run() -> list:
     """Harness entry (benchmarks/run.py CSV convention)."""
     params = get_model(TINY).init(__import__("jax").random.key(0), TINY)
     rows = []
-    for slots in (1, 2, 4, 8):
-        r = bench(params, slots=slots, n_requests=8, max_new=8)
-        rows.append({
-            "name": f"serve/throughput_slots{slots}",
-            "us_per_call": round(1e6 * r["wall_s"] / max(r["decode_steps"], 1),
-                                 1),
-            "derived": (f"tok_per_s={r['tokens_per_s']} "
-                        f"decode_steps={r['decode_steps']} "
-                        f"decode_traces={r['decode_traces']}"),
-        })
+    for paged in (False, True):
+        for slots in (1, 2, 4, 8):
+            r = bench(params, slots=slots, n_requests=8, max_new=8,
+                      paged=paged)
+            layout = "paged" if paged else "dense"
+            rows.append({
+                "name": f"serve/throughput_{layout}_slots{slots}",
+                "us_per_call": round(
+                    1e6 * r["wall_s"] / max(r["decode_steps"], 1), 1),
+                "derived": (f"tok_per_s={r['tokens_per_s']} "
+                            f"decode_steps={r['decode_steps']} "
+                            f"decode_traces={r['decode_traces']} "
+                            f"peak_kv_bytes={r['peak_kv_bytes']}"),
+            })
     return rows
 
 
@@ -87,6 +101,11 @@ def main():
     ap.add_argument("--requests", type=int, default=8)
     ap.add_argument("--max-new", type=int, default=8)
     ap.add_argument("--max-len", type=int, default=64)
+    ap.add_argument("--paged", action="store_true",
+                    help="use the paged (block-table) KV layout")
+    ap.add_argument("--page-size", type=int, default=16)
+    ap.add_argument("--kv-pages", type=int, default=None,
+                    help="paged pool size (default: dense-capacity parity)")
     ap.add_argument("--json", type=str, default="",
                     help="write results to this path (default: stdout)")
     args = ap.parse_args()
@@ -94,7 +113,9 @@ def main():
     import jax
     params = get_model(TINY).init(jax.random.key(0), TINY)
     results = [bench(params, slots=s, n_requests=args.requests,
-                     max_new=args.max_new, max_len=args.max_len)
+                     max_new=args.max_new, max_len=args.max_len,
+                     paged=args.paged, page_size=args.page_size,
+                     kv_pages=args.kv_pages)
                for s in args.slots]
     report = {"config": TINY.name, "results": results}
     out = json.dumps(report, indent=2)
@@ -106,7 +127,8 @@ def main():
             print(f"slots={r['slots']:>2} {r['tokens_per_s']:>8.1f} tok/s "
                   f"({r['tokens_per_s'] / base:.2f}x, "
                   f"{r['decode_steps']} decode calls, "
-                  f"{r['decode_traces']} trace)")
+                  f"{r['decode_traces']} trace, "
+                  f"kv {r['peak_kv_bytes'] / 1e6:.2f}MB)")
     else:
         print(out)
 

@@ -139,15 +139,32 @@ class Session:
     # -------------------------------------------------------------- serve
     def serve(self, *, slots: int = 4, max_len: int = 256,
               eos_id: Optional[int] = None, temperature: float = 0.0,
-              seed: Optional[int] = None) -> ServeEngine:
+              seed: Optional[int] = None, paged: Optional[bool] = None,
+              page_size: int = 16,
+              kv_pages: Optional[int] = None) -> ServeEngine:
         """Continuous-batching engine over this session's params: one
         batched jitted decode advances the whole slot table per step.
         ``temperature > 0`` switches the on-device sampler from greedy to
-        temperature sampling (seeded from the session seed by default)."""
+        temperature sampling (seeded from the session seed by default).
+
+        KV layout: ``paged=None`` (default) picks the paged block-table
+        cache for full-attention decoders (dense / MoE / enc-dec) and
+        falls back to dense rows for SWA-ring and SSM archs;
+        ``paged=False`` forces dense. Paged decode is token-identical to
+        dense for row-independent archs; batched MoE is the standing
+        exception — capacity routing couples slot rows (see the engine
+        docstring), and inactive-row scratch differs between layouts, so
+        multi-slot MoE outputs may differ across layouts as they already
+        do across occupancies. ``page_size`` tokens per page;
+        ``kv_pages`` bounds the shared pool (default: capacity parity
+        with dense, ``slots * ceil(max_len / page_size)``) — size it below
+        that to trade worst-case admission for HBM."""
         return ServeEngine(self.cfg, self.params, slots=slots,
                            max_len=max_len, eos_id=eos_id,
                            temperature=temperature,
-                           seed=self.seed if seed is None else seed)
+                           seed=self.seed if seed is None else seed,
+                           paged=paged, page_size=page_size,
+                           kv_pages=kv_pages)
 
     # ------------------------------------------------------------- dryrun
     def dryrun(self, shape: ShapeLike, *, verbose: bool = False,

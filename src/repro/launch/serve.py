@@ -4,6 +4,11 @@ stream a synthetic request workload through it.
 
     PYTHONPATH=src python -m repro.launch.serve --arch qwen3-14b \
         --requests 6 --max-new 12
+
+The engine defaults to the paged (block-table) KV cache wherever it is
+exact; ``--dense`` forces the contiguous per-slot layout, ``--page-size``
+/ ``--kv-pages`` shape the paged pool. Audio (enc-dec) archs serve with
+synthetic frame embeddings standing in for the stubbed mel+conv frontend.
 """
 from __future__ import annotations
 
@@ -25,29 +30,43 @@ def main():
     ap.add_argument("--max-len", type=int, default=128)
     ap.add_argument("--temperature", type=float, default=0.0,
                     help="0 = greedy; >0 = on-device temperature sampling")
+    ap.add_argument("--dense", action="store_true",
+                    help="force the dense per-slot KV layout "
+                         "(default: paged block tables where exact)")
+    ap.add_argument("--page-size", type=int, default=16,
+                    help="tokens per KV page (paged layout)")
+    ap.add_argument("--kv-pages", type=int, default=None,
+                    help="shared pool size in pages (default: dense-"
+                         "capacity parity, slots*ceil(max_len/page_size))")
     args = ap.parse_args()
 
     cfg = get_smoke(args.arch).with_(dtype="float32")
-    if cfg.arch_type in ("audio", "vlm"):
-        raise SystemExit(f"{args.arch}: the engine drives token-only "
-                         "decoders; audio/VLM serving needs the stubbed "
-                         "frontends wired into prefill (see serve/step.py)")
+    if cfg.arch_type == "vlm":
+        raise SystemExit(f"{args.arch}: VLM serving needs the stubbed "
+                         "vision frontend wired into engine prefill "
+                         "(see serve/step.py)")
     session = Session(cfg)
     eng = session.serve(slots=args.slots, max_len=args.max_len,
-                        temperature=args.temperature)
+                        temperature=args.temperature,
+                        paged=False if args.dense else None,
+                        page_size=args.page_size, kv_pages=args.kv_pages)
 
     rng = np.random.default_rng(0)
     for rid in range(args.requests):
         n = int(rng.integers(4, 16))
+        frames = (rng.standard_normal((cfg.encoder_ctx, cfg.d_model))
+                  .astype(np.float32) if cfg.arch_type == "audio" else None)
         eng.submit(rid, rng.integers(0, cfg.vocab_size, size=(n,)),
-                   max_new=args.max_new)
+                   max_new=args.max_new, frames=frames)
 
     t0 = time.time()
     results = eng.run()
     dt = time.time() - t0
     total = sum(len(r.out) for r in results.values())
+    layout = f"paged/{eng.page_size}tok-pages" if eng.paged else "dense"
     print(f"served {len(results)} requests, {total} tokens "
           f"in {dt:.2f}s ({total / dt:.1f} tok/s, {args.slots} slots, "
+          f"{layout} kv {eng.kv_bytes() / 1e6:.1f}MB, "
           f"{eng.stats['decode_steps']} decode calls, "
           f"{eng.stats['decode_traces']} decode trace)")
     for rid in sorted(results):

@@ -13,7 +13,8 @@ import numpy as np
 from repro.core.pspec import constrain
 from repro.models import kvcache
 from repro.models.layers import (attention, attn_out, attn_qkv, dense_init,
-                                 init_attn, init_mlp, mlp, rmsnorm)
+                                 init_attn, init_mlp, mlp, paged_attention,
+                                 rmsnorm)
 
 
 def sinusoid(length: int, dim: int):
@@ -155,9 +156,17 @@ def prefill(params, batch, cfg, cache, *, attn_impl="auto"):
 
 
 def decode_step(params, cache, token, pos, cfg):
-    """``pos``: scalar (lockstep) or (B,) per-row vector (slot-table)."""
+    """``pos``: scalar (lockstep) or (B,) per-row vector (slot-table).
+
+    With a ``"ptab"`` page table in the cache (the serve engine's paged
+    layout) the decoder self-attention KV goes through the block-table
+    path; the cross-attention KV stays a dense per-slot block — its length
+    is the FIXED encoder context, so paging it would buy nothing.
+    """
     x = params["tok_embed"][token].astype(jnp.dtype(cfg.dtype))
-    w = cache["kv"]["k"].shape[2]
+    paged = "ptab" in cache
+    w = (cache["ptab"].shape[1] * cache["kv"]["k"].shape[2] if paged
+         else cache["kv"]["k"].shape[2])
     pos = jnp.asarray(pos, jnp.int32)
     pe_table = sinusoid(w, cfg.d_model)
     if pos.ndim:
@@ -165,14 +174,21 @@ def decode_step(params, cache, token, pos, cfg):
     else:
         pe = jax.lax.dynamic_slice_in_dim(pe_table, pos, 1)
     x = x + pe.astype(x.dtype)
+    positions = pos if pos.ndim else \
+        jnp.full((token.shape[0],), pos, jnp.int32)
 
     def body(x, lp_kv):
         lp, kv, xkv = lp_kv
         h = rmsnorm(x, lp["ln1"], cfg.norm_eps)
         q, k, v = attn_qkv(lp["attn"], h, cfg, rope=False)
-        kv = kvcache.write_kv(kv, k, v, pos)
-        ctx = attention(q, kv["k"], kv["v"], causal=True, q_offset=pos,
-                        kv_len=jnp.minimum(pos + 1, w))
+        if paged:
+            kv = kvcache.write_kv_paged(kv, k, v, cache["ptab"], positions)
+            ctx = paged_attention(q, kv["k"], kv["v"], cache["ptab"],
+                                  positions)
+        else:
+            kv = kvcache.write_kv(kv, k, v, pos)
+            ctx = attention(q, kv["k"], kv["v"], causal=True, q_offset=pos,
+                            kv_len=jnp.minimum(pos + 1, w))
         x = x + attn_out(lp["attn"], ctx, cfg)
         x = _cross(lp, x, xkv, cfg)
         x = x + mlp(lp["mlp"], rmsnorm(x, lp["ln2"], cfg.norm_eps))
@@ -182,4 +198,7 @@ def decode_step(params, cache, token, pos, cfg):
                                     cache["xkv"]))
     x = rmsnorm(x, params["final_norm"], cfg.norm_eps)
     logits = x @ params["lm_head"]
-    return logits, {"kv": kvs, "xkv": cache["xkv"], "pos": pos + 1}
+    out = {"kv": kvs, "xkv": cache["xkv"], "pos": pos + 1}
+    if paged:
+        out["ptab"] = cache["ptab"]
+    return logits, out

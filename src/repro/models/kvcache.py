@@ -26,6 +26,32 @@ scalar:
 A model-level ``cache["pos"]`` stays a scalar for the lockstep paths
 (greedy_generate, dry-runs); the engine keeps its own (slots,) vector and
 passes it to ``decode_step`` directly.
+
+Paged layout (vLLM-style block tables; arXiv:2309.06180)
+--------------------------------------------------------
+The third layout drops per-slot rows entirely: one flat POOL of
+fixed-size pages ``(layers, n_pages, page_size, Hkv, D)`` shared by every
+slot, plus a per-slot page table ``ptab`` (slots, P) of pool indices that
+maps logical block ``p // page_size`` of slot ``b`` to a physical page.
+Token ``p`` of slot ``b`` therefore lives at
+``pool[ptab[b, p // page_size], p % page_size]``:
+
+  * ``write_kv_paged`` scatters each row's decode token through the table
+    at its own cursor — still ONE device program for the whole slot table;
+  * ``layers.paged_attention`` gathers ``pool[ptab[b]]`` so the gathered
+    axis IS the position axis, then masks to each row's live prefix —
+    identical math to the dense path, so paged and dense decode are
+    token-identical for row-independent (non-MoE) archs; MoE capacity
+    routing couples slot rows either way, and the layouts feed inactive
+    rows different scratch, so batched MoE keeps its existing
+    occupancy-dependence caveat across layouts;
+  * page id 0 is the NULL page: inactive slots and bucket padding write
+    there harmlessly, and table entries beyond a slot's reservation point
+    at it (always masked by ``kv_len``).
+
+WHICH pages a slot owns is host-side bookkeeping
+(``serve/paging.PageAllocator``); the device never sees the free-list,
+only the table values, so admission/churn never retraces the step.
 """
 from __future__ import annotations
 
@@ -35,6 +61,44 @@ import jax.numpy as jnp
 def init_kv(batch: int, length: int, n_kv: int, head_dim: int, dtype):
     shape = (batch, length, n_kv, head_dim)
     return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+
+
+def init_paged_kv(layers: int, n_pages: int, page_size: int, n_kv: int,
+                  head_dim: int, dtype):
+    """Flat page pool shared by every slot. ``n_pages`` INCLUDES the null
+    page 0 (so a pool serving K usable pages has n_pages = K + 1)."""
+    shape = (layers, n_pages, page_size, n_kv, head_dim)
+    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+
+
+def write_kv_paged(cache, k_new, v_new, page_table, pos):
+    """Scatter one decode token per slot through the page table.
+
+    cache leaves: (n_pages, page_size, Hkv, D) — ONE layer's pool (models
+    scan over the stacked layer axis). k_new/v_new: (B, 1, Hkv, D);
+    page_table: (B, P) pool indices; pos: (B,) per-row cursors. Inactive
+    slots resolve to the null page 0 (their table rows are zeroed and the
+    block index is clipped), so the scatter is total — no masking branch,
+    no retrace.
+    """
+    page_size = cache["k"].shape[1]
+    pos = jnp.asarray(pos)
+    rows = jnp.arange(page_table.shape[0])
+    blk = jnp.clip(pos // page_size, 0, page_table.shape[1] - 1)
+    page = page_table[rows, blk]
+    off = pos % page_size
+    cache = dict(cache)
+    cache["k"] = cache["k"].at[page, off].set(k_new[:, 0])
+    cache["v"] = cache["v"].at[page, off].set(v_new[:, 0])
+    return cache
+
+
+def gather_pages(pool, page_table):
+    """pool: (n_pages, page_size, ...); page_table: (B, P) -> contiguous
+    per-row KV (B, P * page_size, ...) in logical position order."""
+    b, p = page_table.shape
+    out = pool[page_table]
+    return out.reshape(b, p * pool.shape[1], *pool.shape[2:])
 
 
 def ring_slot(pos, window: int):

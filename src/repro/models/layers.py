@@ -23,6 +23,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.pspec import constrain
+from repro.models.kvcache import gather_pages
 
 # ---------------------------------------------------------------- init utils
 
@@ -113,6 +114,34 @@ def attention_full(q, k, v, *, causal: bool, window: int = 0,
     scores = jnp.where(mask[:, None], scores, NEG_INF)
     probs = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
     return jnp.einsum("bhst,bthd->bshd", probs, v)
+
+
+def paged_attention(q, k_pages, v_pages, page_table, pos):
+    """Decode-time block-table attention over a paged KV pool (vLLM-style).
+
+    q: (B, 1, Hq, D) — one fresh token per slot-table row.
+    k_pages/v_pages: (n_pages, page_size, Hkv, D) — the flat shared pool.
+    page_table: (B, P) pool indices per row (0 = null page).
+    pos: (B,) per-row cursors (tokens already in context, incl. this one's
+    write — the query attends to positions [0, pos]).
+
+    Each row's pages are gathered in logical-block order, so the gathered
+    axis IS the position axis and the dense mask machinery applies
+    unchanged: ``kv_len = pos + 1`` hides null/garbage tail pages. The
+    gather is a table lookup — table VALUES change between steps, shapes
+    never do, so the batched decode program still traces exactly once.
+
+    Cost note: the gather materializes the FULL table width
+    (``P * page_size`` positions) per row per layer — the same transient
+    working set dense decode attention reads. Paging shrinks the
+    RESIDENT pool between steps; bounding the per-step gather to the max
+    live page count would need dynamic shapes (a retrace per occupancy
+    high-water mark) and is left to the roadmap's lazy-growth follow-up.
+    """
+    kv_len = jnp.asarray(pos) + 1
+    k = gather_pages(k_pages, page_table)
+    v = gather_pages(v_pages, page_table)
+    return attention_full(q, k, v, causal=True, q_offset=pos, kv_len=kv_len)
 
 
 def _attn_block(q, k, v, qpos, kpos, scale, causal, window, m, l, acc):

@@ -24,7 +24,8 @@ import jax.numpy as jnp
 from repro.core.pspec import constrain
 from repro.models import kvcache, moe as moe_lib
 from repro.models.layers import (attention, attn_out, attn_qkv, dense_init,
-                                 init_attn, init_mlp, mlp, rmsnorm)
+                                 init_attn, init_mlp, mlp, paged_attention,
+                                 rmsnorm)
 
 
 # ----------------------------------------------------------------- init
@@ -165,25 +166,37 @@ def decode_step(params, cache, token, pos, cfg):
     the lockstep paths, or a (B,) vector for the slot-table decode — each
     row then reads/writes its own cursor.
 
+    A cache carrying a ``"ptab"`` page table (the serve engine's paged
+    layout — see models/kvcache.py) switches the KV write/read to the
+    block-table path: scatter through the table, attend over gathered
+    pages. Math is identical to the dense path, so outputs are
+    token-identical.
+
     Returns (logits (B,1,V), new cache).
     """
     x = _embed(params, token, cfg)
+    paged = "ptab" in cache
     w = cache["kv"]["k"].shape[2]
-    ring = cfg.sliding_window > 0 and w == cfg.sliding_window
+    ring = not paged and cfg.sliding_window > 0 and w == cfg.sliding_window
     pos = jnp.asarray(pos, jnp.int32)
     batched_pos = pos.ndim > 0
     positions = pos[:, None] if batched_pos else \
         jnp.full((token.shape[0], 1), pos)
 
     from repro.models.cp_attention import cp_available, cp_decode_attention
-    use_cp = (cfg.cp_decode and not ring and not batched_pos
+    use_cp = (cfg.cp_decode and not ring and not paged and not batched_pos
               and cp_available(cache["kv"]["k"][0]))
 
     def body(x, lp_kv):
         lp, kv = lp_kv
         h = rmsnorm(x, lp["ln1"], cfg.norm_eps)
         q, k, v = attn_qkv(lp["attn"], h, cfg, positions=positions)
-        if use_cp:
+        if paged:
+            kv = kvcache.write_kv_paged(kv, k, v, cache["ptab"],
+                                        positions[:, 0])
+            ctx = paged_attention(q, kv["k"], kv["v"], cache["ptab"],
+                                  positions[:, 0])
+        elif use_cp:
             # context-parallel: shard-local write + psum-softmax combine
             ctx, kv = cp_decode_attention(q, kv, k, v, pos,
                                           window=cfg.sliding_window)
@@ -203,4 +216,7 @@ def decode_step(params, cache, token, pos, cfg):
         return x + y, kv
 
     x, kvs = jax.lax.scan(body, x, (params["layers"], cache["kv"]))
-    return _head(params, x, cfg), {"kv": kvs, "pos": pos + 1}
+    out = {"kv": kvs, "pos": pos + 1}
+    if paged:
+        out["ptab"] = cache["ptab"]
+    return _head(params, x, cfg), out

@@ -2,36 +2,56 @@
 
 A fixed-size slot table (the batch) holds independent requests at
 different generation depths. The whole table advances with a SINGLE
-jitted decode call per engine step: every cache leaf is stacked
-``(layers, slots, ...)``, positions are a per-slot vector, and
-``decode_step`` scatters each row's new KV at its own cursor
-(``cache["k"].at[arange(slots), pos]``) while the attention mask keeps
-each row inside its own valid prefix. Finished/empty slots are masked on
-device — their sampled tokens are zeroed and their cursors frozen — so
-device dispatch per step is O(1) in the number of active slots, not
-O(active_slots) as in the per-slot loop this replaces.
+jitted decode call per engine step: positions are a per-slot vector, and
+``decode_step`` scatters each row's new KV at its own cursor while the
+attention mask keeps each row inside its own valid prefix. Finished/empty
+slots are masked on device — their sampled tokens are zeroed and their
+cursors frozen — so device dispatch per step is O(1) in the number of
+active slots.
+
+KV layouts (models/kvcache.py):
+
+  * PAGED (default where supported — vLLM-style block tables): one flat
+    pool of ``page_size``-token pages shared by every slot, plus a
+    per-slot page table. Admission reserves
+    ``ceil(min(prompt + max_new - 1, max_len) / page_size)`` pages from a
+    host-side free-list (serve/paging.py) and frees them when the request
+    retires, so a short request holds pages for ITS context, not a dense
+    ``max_len`` row — under a fixed HBM budget the paged pool admits
+    ~``max_len / ctx`` times more concurrent short requests. The page
+    table is a device array whose VALUES change at admission/retire while
+    its shape never does, so the whole run still traces exactly one
+    decode program.
+  * DENSE (``paged=False``, and the automatic fallback): one contiguous
+    ``max_len`` (or ring-window) row per slot. Sliding-window (ring) and
+    SSM/hybrid archs keep this layout — a ring cache is already O(window)
+    and the SSM state is O(1), so pages would add indirection for no
+    memory win.
 
 Admission fills free slots from a FIFO queue between steps (the standard
-orca/vllm-style outer loop, minus paged KV). Prefill pads prompts to
-power-of-two buckets (serve/step.prefill_bucket) so XLA retraces at most
-log2(max_len) prefill shapes instead of one per distinct prompt length;
-the padded rows are causally invisible and their cache entries stay
-masked until decode overwrites them. Sampling (greedy or temperature)
-runs on device inside the same jitted step (serve/sampling.py).
+orca/vllm outer loop). Prefill pads prompts to power-of-two buckets
+(serve/step.prefill_bucket) so XLA retraces at most log2(max_len) prefill
+shapes; paged prefill additionally rounds the bucket up to whole pages
+and scatters the fresh KV page-wise (serve/step.scatter_prefill_pages).
+Sampling (greedy or temperature) runs on device inside the same jitted
+step (serve/sampling.py).
 
 Caveats: MoE archs skip prompt bucketing, and their batched decode can
 differ from single-request decode — capacity-based expert routing couples
 rows of a batch (pad/neighbour tokens consume expert capacity). Dense,
 SSM and hybrid archs are row-independent and token-identical to
-sequential decoding.
+sequential decoding. Enc-dec (audio) requests must carry precomputed
+frame embeddings (``submit(..., frames=...)`` — the mel+conv frontend is
+the assignment's allowed stub); their decoder KV pages like any dense
+decoder while the cross-attention KV stays one fixed-size block per slot.
 
 ``engine.stats`` counts device calls AND traces (``decode_traces`` /
 ``prefill_traces`` increment only while tracing), so tests can assert the
 one-program property directly.
 
-Preferred construction: ``repro.api.Session.serve(slots=..., max_len=...)``
-— the Session supplies the params (freshly initialised, restored from a
-checkpoint, or just trained) so callers never thread param trees by hand.
+Preferred construction: ``repro.api.Session.serve(slots=..., max_len=...,
+page_size=...)`` — the Session supplies the params so callers never
+thread param trees by hand.
 """
 from __future__ import annotations
 
@@ -43,13 +63,17 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.models import get_model
+from repro.models import get_model, kvcache
+from repro.serve.paging import PageAllocator, pages_for
 from repro.serve.sampling import sample_tokens
-from repro.serve.step import prefill_bucket
+from repro.serve.step import prefill_bucket, scatter_prefill_pages
 
-#: archs the token-only engine can serve (audio/VLM need their stubbed
-#: frontends wired into prefill; see serve/step.py).
+#: archs the token-only engine can serve without per-request extras.
 TOKEN_ONLY_ARCHS = ("dense", "moe", "ssm", "hybrid")
+#: + enc-dec audio, whose requests carry stubbed frame embeddings.
+SERVABLE_ARCHS = TOKEN_ONLY_ARCHS + ("audio",)
+#: archs whose decode cache can use the paged (block-table) layout.
+PAGEABLE_ARCHS = ("dense", "moe", "audio")
 
 
 @dataclass
@@ -62,22 +86,42 @@ class Request:
     max_new: int
     out: List[int] = field(default_factory=list)
     done: bool = False
+    frames: Optional[np.ndarray] = None   # (enc_ctx, d_model), audio archs
 
 
 class ServeEngine:
     def __init__(self, cfg, params, *, slots: int = 4, max_len: int = 256,
                  eos_id: Optional[int] = None, temperature: float = 0.0,
-                 seed: int = 0):
-        if cfg.arch_type not in TOKEN_ONLY_ARCHS:
+                 seed: int = 0, paged: Optional[bool] = None,
+                 page_size: int = 16, kv_pages: Optional[int] = None):
+        if cfg.arch_type not in SERVABLE_ARCHS:
             raise ValueError(
-                f"{cfg.name}: the engine drives token-only decoders "
-                f"({'/'.join(TOKEN_ONLY_ARCHS)}), not {cfg.arch_type}")
+                f"{cfg.name}: the engine drives token/frame decoders "
+                f"({'/'.join(SERVABLE_ARCHS)}), not {cfg.arch_type}")
+        pageable = (cfg.arch_type in PAGEABLE_ARCHS
+                    and cfg.sliding_window == 0)
+        if paged is None:
+            # auto: paged for every full-attention decoder. Exact vs dense
+            # for row-independent archs; MoE keeps its standing batched-
+            # routing caveat (see module docstring) under either layout.
+            paged = pageable
+        elif paged and not pageable:
+            raise ValueError(
+                f"{cfg.name}: paged KV needs a full-attention decoder "
+                f"({'/'.join(PAGEABLE_ARCHS)}, no sliding window); "
+                f"{cfg.arch_type}"
+                + (" + SWA ring" if cfg.sliding_window else "")
+                + " keeps the dense layout (paged=False)")
+        if page_size < 1:
+            raise ValueError(f"page_size must be >= 1, got {page_size}")
         self.cfg, self.params = cfg, params
         self.model = get_model(cfg)
         self.slots = slots
         self.max_len = max_len
         self.eos_id = eos_id
         self.temperature = temperature
+        self.paged = paged
+        self.page_size = page_size
         # FIFO admission queue: deque so heavy-traffic admission stays O(1)
         # per pop (a list's pop(0) is O(n) in queued requests)
         self.queue: Deque[Request] = deque()
@@ -91,14 +135,50 @@ class ServeEngine:
         self._cache["pos"] = jnp.zeros((slots,), jnp.int32)
         self._pos = np.zeros(slots, np.int64)    # host mirror: tokens in ctx
         self._last = np.zeros(slots, np.int64)   # host mirror: last token
+        if paged:
+            # swap the dense per-slot rows for a flat page pool + table;
+            # page 0 is the null page (inactive-slot / padding scratch)
+            pps = pages_for(max_len, page_size)  # table width: blocks/slot
+            self.kv_pages = kv_pages if kv_pages is not None \
+                else slots * pps
+            if self.kv_pages < 1:
+                raise ValueError(
+                    f"kv_pages must be >= 1, got {self.kv_pages}")
+            dtype = self._cache["kv"]["k"].dtype
+            self._cache["kv"] = kvcache.init_paged_kv(
+                cfg.num_layers, self.kv_pages + 1, page_size,
+                cfg.num_kv_heads, cfg.head_dim, dtype)
+            self._cache["ptab"] = jnp.zeros((slots, pps), jnp.int32)
+            self._ptab = np.zeros((slots, pps), np.int64)
+            self._ptab_dirty = False
+            self._alloc = PageAllocator(self.kv_pages, page_size,
+                                        first_page=1)
         # bucketing: attention masks make right-padding exact for dense;
         # MoE capacity routing and the SSM recurrence are perturbed by pad
-        # tokens, so those archs prefill at exact length (retrace per len).
+        # tokens (and enc-dec prefill gathers no last_pos), so those archs
+        # prefill at exact length (retrace per len).
         self._bucketed = cfg.arch_type == "dense"
-        self._window = (self._cache["kv"]["k"].shape[2]
-                        if "kv" in self._cache else max_len)
+        self._window = max_len if paged else \
+            (self._cache["kv"]["k"].shape[2]
+             if "kv" in self._cache else max_len)
         self._decode = jax.jit(self._decode_fn, donate_argnums=(1,))
         self._prefill = jax.jit(self._prefill_fn, donate_argnums=(1,))
+
+    # ------------------------------------------------------------ memory
+    def kv_bytes(self) -> int:
+        """Device bytes RESIDENT in the engine's decode state (KV
+        pool/rows, SSM states, cross-attention blocks; cursors and the
+        page table are negligible and excluded). Static for the engine's
+        lifetime — the paged pool is allocated up front. Step TRANSIENTS
+        are extra and layout-independent: paged decode gathers each slot's
+        full table width per layer (see layers.paged_attention), the same
+        O(slots * max_len) working set dense attention reads — pages
+        shrink what LIVES in HBM between steps, not the per-step
+        scratch."""
+        return sum(leaf.size * leaf.dtype.itemsize
+                   for key, big in self._cache.items()
+                   if key not in ("pos", "ptab")
+                   for leaf in jax.tree.leaves(big))
 
     # ------------------------------------------------------- jitted steps
     def _decode_fn(self, params, cache, tokens, pos, active, rng):
@@ -113,24 +193,39 @@ class ServeEngine:
         cache["pos"] = jnp.where(active, pos + 1, pos)
         return tok, cache
 
-    def _prefill_fn(self, params, cache, tokens, last_pos, slot, rng):
+    def _prefill_fn(self, params, cache, tokens, extra, last_pos, slot,
+                    pages, rng):
         """Prefill one (bucket-padded) prompt, sample its first token, and
-        scatter the fresh per-request cache into slot-table row ``slot``.
+        store the fresh per-request cache: dense leaves scatter into
+        slot-table row ``slot``; with the paged layout the decoder KV
+        scatters page-wise into the pool through ``pages`` instead.
         Retraces once per distinct padded length (= per bucket)."""
         self.stats["prefill_traces"] += 1
-        c1 = self.model.init_cache(self.cfg, 1, self.max_len)
-        if self._bucketed:
-            logits, c1 = self.model.prefill(params, {"tokens": tokens},
-                                            self.cfg, c1, last_pos=last_pos)
+        if self.paged:
+            # size the scratch cache to whole pages so the page scatter is
+            # a static reshape (bucket padding lands in the null page)
+            clen = pages_for(tokens.shape[1], self.page_size) \
+                * self.page_size
         else:
-            logits, c1 = self.model.prefill(params, {"tokens": tokens},
-                                            self.cfg, c1)
+            clen = self.max_len
+        c1 = self.model.init_cache(self.cfg, 1, clen)
+        batch = {"tokens": tokens, **extra}
+        if self._bucketed:
+            logits, c1 = self.model.prefill(params, batch, self.cfg, c1,
+                                            last_pos=last_pos)
+        else:
+            logits, c1 = self.model.prefill(params, batch, self.cfg, c1)
         tok = sample_tokens(logits[0, -1], rng=rng,
                             temperature=self.temperature)
         out = {}
         for key, big in cache.items():
             if key == "pos":
                 out[key] = big.at[slot].set(last_pos + 1)
+            elif key == "ptab":
+                out[key] = big
+            elif key == "kv" and self.paged:
+                out[key] = scatter_prefill_pages(big, c1[key], pages,
+                                                 self.page_size)
             else:
                 out[key] = jax.tree.map(
                     lambda b, o: b.at[:, slot].set(o[:, 0]), big, c1[key])
@@ -143,9 +238,14 @@ class ServeEngine:
         return key
 
     # --------------------------------------------------------- scheduling
-    def submit(self, rid: int, prompt: np.ndarray, max_new: int):
-        """Queue a request. Rejects inputs the cache cannot hold instead of
-        silently clamping writes into the last row."""
+    def submit(self, rid: int, prompt: np.ndarray, max_new: int, *,
+               frames: Optional[np.ndarray] = None):
+        """Queue a request. Rejects inputs the engine can NEVER hold —
+        prompts at/over ``max_len`` and, on the paged layout, requests
+        whose worst-case context needs more pages than the whole pool —
+        instead of silently clamping writes. (Transient pressure is not a
+        rejection: a request that merely has to WAIT for free pages or a
+        free slot stays queued.)"""
         prompt = np.asarray(prompt, np.int32).reshape(-1)
         if prompt.size == 0:
             raise ValueError(f"request {rid}: empty prompt")
@@ -156,7 +256,31 @@ class ServeEngine:
                 f"{self.max_len - 1} tokens")
         if max_new < 1:
             raise ValueError(f"request {rid}: max_new must be >= 1")
-        self.queue.append(Request(rid, prompt, int(max_new)))
+        if self.paged:
+            need = pages_for(min(prompt.size + max_new - 1, self.max_len),
+                             self.page_size)
+            if need > self.kv_pages:
+                raise ValueError(
+                    f"request {rid}: needs {need} KV pages "
+                    f"({self.page_size} tokens each) but the pool holds "
+                    f"{self.kv_pages}; raise kv_pages or lower "
+                    f"prompt+max_new")
+        if self.cfg.arch_type == "audio":
+            if frames is None:
+                raise ValueError(
+                    f"request {rid}: {self.cfg.name} is an enc-dec arch; "
+                    "submit(..., frames=(encoder_ctx, d_model)) frame "
+                    "embeddings (the stubbed audio frontend's output)")
+            frames = np.asarray(frames, np.float32)
+            want = (self.cfg.encoder_ctx, self.cfg.d_model)
+            if frames.shape != want:
+                raise ValueError(
+                    f"request {rid}: frames shape {frames.shape} != {want}")
+        elif frames is not None:
+            raise ValueError(
+                f"request {rid}: frames are only meaningful for audio "
+                f"archs, not {self.cfg.arch_type}")
+        self.queue.append(Request(rid, prompt, int(max_new), frames=frames))
 
     def _free_slot(self) -> Optional[int]:
         for s in range(self.slots):
@@ -169,36 +293,67 @@ class ServeEngine:
             s = self._free_slot()
             if s is None:
                 return
-            req = self.queue.popleft()
+            req = self.queue[0]
             n = len(req.prompt)
             blen = prefill_bucket(n, cap=self._window) if self._bucketed \
                 else n
+            pages = None
+            if self.paged:
+                # reserve the request's worst-case context up front: no
+                # mid-decode allocation can fail, so no preemption path.
+                # FIFO head-of-line: when pages run short we WAIT for a
+                # retirement instead of admitting around the head.
+                ctx_cap = min(n + req.max_new - 1, self.max_len)
+                got = self._alloc.alloc(s, ctx_cap)
+                if got is None:
+                    return
+                self._ptab[s] = 0
+                self._ptab[s, :len(got)] = got
+                self._ptab_dirty = True
+                npb = pages_for(blen, self.page_size)
+                page_vec = np.zeros(npb, np.int64)
+                page_vec[:min(npb, len(got))] = got[:npb]
+                pages = jnp.asarray(page_vec, jnp.int32)
+            self.queue.popleft()
             padded = np.zeros(blen, np.int32)
             padded[:n] = req.prompt
+            extra = {} if req.frames is None else \
+                {"frames": jnp.asarray(req.frames[None])}
             tok, self._cache = self._prefill(
-                self.params, self._cache, jnp.asarray(padded[None]),
+                self.params, self._cache, jnp.asarray(padded[None]), extra,
                 jnp.asarray(n - 1, jnp.int32), jnp.asarray(s, jnp.int32),
-                self._next_rng())
+                pages, self._next_rng())
             self.stats["prefills"] += 1
             tok = int(tok)
             req.out.append(tok)
             self._pos[s] = n
             self._last[s] = tok
             # honor max_new / EOS on the PREFILL-sampled token: a request
-            # that is already complete never occupies a slot, so output
-            # length is exactly min(max_new, tokens-until-EOS)
+            # that is already complete never occupies a slot (or pages), so
+            # output length is exactly min(max_new, tokens-until-EOS)
             hit_eos = self.eos_id is not None and tok == self.eos_id
             if req.max_new <= 1 or hit_eos:
                 req.done = True
                 self.finished[req.rid] = req
+                if self.paged:
+                    self._release_pages(s)
             else:
                 self.active[s] = req
+
+    def _release_pages(self, s: int):
+        """Return slot ``s``'s pages to the free-list and point its table
+        row at the null page so any frozen-cursor write lands in scratch."""
+        self._alloc.free(s)
+        self._ptab[s] = 0
+        self._ptab_dirty = True
 
     def _retire(self, s: int):
         req = self.active[s]
         req.done = True
         self.finished[req.rid] = req
         self.active[s] = None
+        if self.paged:
+            self._release_pages(s)
 
     # -------------------------------------------------------------- serve
     def step(self):
@@ -208,6 +363,9 @@ class ServeEngine:
         mask = np.array([r is not None for r in self.active])
         if not mask.any():
             return
+        if self.paged and self._ptab_dirty:
+            self._cache["ptab"] = jnp.asarray(self._ptab, jnp.int32)
+            self._ptab_dirty = False
         tok, self._cache = self._decode(
             self.params, self._cache,
             jnp.asarray(self._last[:, None], jnp.int32),

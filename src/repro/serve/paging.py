@@ -1,0 +1,117 @@
+"""Host-side page allocator for the paged KV cache (vLLM-style block tables).
+
+The device pool (``models/kvcache.init_paged_kv``) is a flat array of
+fixed-size pages; WHICH pages belong to WHICH slot is pure bookkeeping, so
+it lives here on the host as a free-list over page ids. The engine reserves
+a slot's worst-case page count at admission (``ceil(ctx_cap / page_size)``,
+where ``ctx_cap = min(prompt + max_new - 1, max_len)``) and returns every
+page to the free-list when the request retires — no page is ever shared by
+two live slots, and no copy/compaction ever moves a page.
+
+Invariants (the property-test suite in tests/test_paged_allocator.py
+churns random admission/extend/free sequences against a reference model):
+
+  * a page is owned by at most one live owner at a time;
+  * ``free(owner)`` returns ALL of the owner's pages to the free-list;
+  * ``pages_in_use == sum(ceil(len_i / page_size))`` over live owners;
+  * ``alloc`` fails (returns None) exactly when the free-list is shorter
+    than the request — never by fragmentation, because pages are uniform.
+
+Page id 0 is conventionally the NULL page (scratch rows for inactive
+slots and bucket padding); construct with ``first_page=1`` to keep it out
+of circulation.
+"""
+from __future__ import annotations
+
+from collections import deque
+from typing import Deque, Dict, Hashable, List, Optional
+
+
+def pages_for(n_tokens: int, page_size: int) -> int:
+    """Pages needed to hold ``n_tokens`` (= ceil(n_tokens / page_size))."""
+    if n_tokens < 0:
+        raise ValueError(f"n_tokens must be >= 0, got {n_tokens}")
+    return -(-n_tokens // page_size)
+
+
+class PageAllocator:
+    """Free-list allocator over ``num_pages`` uniform KV pages.
+
+    Pure Python, O(pages moved) per call; owners are arbitrary hashable
+    keys (the engine uses slot indices).
+    """
+
+    def __init__(self, num_pages: int, page_size: int, *,
+                 first_page: int = 0):
+        if num_pages < 1:
+            raise ValueError(f"num_pages must be >= 1, got {num_pages}")
+        if page_size < 1:
+            raise ValueError(f"page_size must be >= 1, got {page_size}")
+        self.num_pages = num_pages
+        self.page_size = page_size
+        self.first_page = first_page
+        self._free: Deque[int] = deque(range(first_page,
+                                             first_page + num_pages))
+        self._owned: Dict[Hashable, List[int]] = {}
+        self._len: Dict[Hashable, int] = {}
+
+    # ------------------------------------------------------------- queries
+    @property
+    def free_pages(self) -> int:
+        return len(self._free)
+
+    @property
+    def pages_in_use(self) -> int:
+        return self.num_pages - len(self._free)
+
+    def owners(self):
+        return self._owned.keys()
+
+    def pages_of(self, owner: Hashable) -> List[int]:
+        return list(self._owned.get(owner, ()))
+
+    def can_alloc(self, n_tokens: int) -> bool:
+        return pages_for(n_tokens, self.page_size) <= len(self._free)
+
+    # ----------------------------------------------------------- mutations
+    def alloc(self, owner: Hashable, n_tokens: int) -> Optional[List[int]]:
+        """Reserve pages covering ``n_tokens`` for ``owner``. Returns the
+        page-id list, or None when the free-list is too short (the caller
+        keeps the request queued — admission backpressure, not an error)."""
+        if owner in self._owned:
+            raise ValueError(f"owner {owner!r} already holds pages; "
+                             "free() it before re-allocating")
+        need = pages_for(n_tokens, self.page_size)
+        if need > len(self._free):
+            return None
+        pages = [self._free.popleft() for _ in range(need)]
+        self._owned[owner] = pages
+        self._len[owner] = n_tokens
+        return list(pages)
+
+    def extend(self, owner: Hashable, n_tokens: int) -> Optional[List[int]]:
+        """Grow ``owner``'s reservation to cover ``n_tokens`` total.
+        Returns the NEWLY added pages ([] if already covered), or None if
+        the free-list cannot supply them (reservation unchanged)."""
+        if owner not in self._owned:
+            raise ValueError(f"owner {owner!r} holds no pages")
+        if n_tokens < self._len[owner]:
+            raise ValueError(
+                f"owner {owner!r}: cannot shrink {self._len[owner]} -> "
+                f"{n_tokens} tokens (pages are only released by free())")
+        need = pages_for(n_tokens, self.page_size) - len(self._owned[owner])
+        if need > len(self._free):
+            return None
+        fresh = [self._free.popleft() for _ in range(need)]
+        self._owned[owner].extend(fresh)
+        self._len[owner] = n_tokens
+        return fresh
+
+    def free(self, owner: Hashable) -> List[int]:
+        """Return ALL of ``owner``'s pages to the free-list."""
+        pages = self._owned.pop(owner, None)
+        if pages is None:
+            raise ValueError(f"owner {owner!r} holds no pages")
+        del self._len[owner]
+        self._free.extend(pages)
+        return pages

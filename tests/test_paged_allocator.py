@@ -1,0 +1,114 @@
+"""Property tests (hypothesis): the paged-KV free-list allocator under
+random admission/extend/free churn, checked op-by-op against a pure-Python
+reference model. Invariants:
+
+  * no page is ever owned by two live owners;
+  * every page an owner held returns to the free-list on free();
+  * pages_in_use == sum(ceil(len_i / page_size)) over live owners;
+  * alloc/extend fail (None) exactly when the free-list is too short —
+    uniform pages cannot fragment.
+
+(The non-hypothesis seeded churn variant lives in test_serve_paged.py so
+the invariants keep local coverage when hypothesis is absent.)
+"""
+import pytest
+
+pytest.importorskip(
+    "hypothesis", reason="property tests need hypothesis (pip install -e '.[test]')")
+from hypothesis import given, settings, strategies as hst  # noqa: E402
+
+from repro.serve.paging import PageAllocator, pages_for  # noqa: E402
+
+
+class RefModel:
+    """Reference bookkeeping: just (owner -> token length)."""
+
+    def __init__(self, num_pages, page_size):
+        self.num_pages, self.page_size = num_pages, page_size
+        self.lens = {}
+
+    def pages_in_use(self):
+        return sum(pages_for(n, self.page_size) for n in self.lens.values())
+
+    def can_add(self, extra_pages):
+        return self.pages_in_use() + extra_pages <= self.num_pages
+
+
+def check_invariants(alloc: PageAllocator, ref: RefModel):
+    owned = [p for o in list(alloc.owners()) for p in alloc.pages_of(o)]
+    # no page owned twice
+    assert len(owned) == len(set(owned)), owned
+    # ids stay inside the pool range
+    lo, hi = alloc.first_page, alloc.first_page + alloc.num_pages
+    assert all(lo <= p < hi for p in owned), owned
+    # conservation: free + owned == pool
+    assert alloc.free_pages + len(owned) == alloc.num_pages
+    # in-use == sum of per-owner ceil(len / page_size)
+    assert alloc.pages_in_use == ref.pages_in_use()
+    assert set(alloc.owners()) == set(ref.lens)
+
+
+OPS = hst.lists(
+    hst.tuples(hst.sampled_from(["alloc", "extend", "free"]),
+               hst.integers(0, 4),          # owner (slot) id
+               hst.integers(0, 50)),        # token count / growth
+    min_size=1, max_size=60)
+
+
+@settings(max_examples=60, deadline=None)
+@given(ops=OPS, num_pages=hst.integers(1, 12), page_size=hst.integers(1, 8))
+def test_allocator_churn_matches_reference(ops, num_pages, page_size):
+    alloc = PageAllocator(num_pages, page_size, first_page=1)
+    ref = RefModel(num_pages, page_size)
+    for op, owner, n in ops:
+        if op == "alloc":
+            if owner in ref.lens:
+                with pytest.raises(ValueError):
+                    alloc.alloc(owner, n)
+            else:
+                got = alloc.alloc(owner, n)
+                want_ok = ref.can_add(pages_for(n, page_size))
+                assert (got is not None) == want_ok, (op, owner, n)
+                if got is not None:
+                    ref.lens[owner] = n
+                    assert len(got) == pages_for(n, page_size)
+        elif op == "extend":
+            if owner not in ref.lens:
+                with pytest.raises(ValueError):
+                    alloc.extend(owner, n)
+            else:
+                new_len = ref.lens[owner] + n
+                extra = (pages_for(new_len, page_size)
+                         - pages_for(ref.lens[owner], page_size))
+                got = alloc.extend(owner, new_len)
+                assert (got is not None) == ref.can_add(extra)
+                if got is not None:
+                    ref.lens[owner] = new_len
+                    assert len(got) == extra
+        else:  # free
+            if owner not in ref.lens:
+                with pytest.raises(ValueError):
+                    alloc.free(owner)
+            else:
+                before = alloc.free_pages
+                freed = alloc.free(owner)
+                assert len(freed) == pages_for(ref.lens.pop(owner),
+                                               page_size)
+                assert alloc.free_pages == before + len(freed)
+        check_invariants(alloc, ref)
+
+
+@settings(max_examples=40, deadline=None)
+@given(lens=hst.lists(hst.integers(0, 33), min_size=1, max_size=8),
+       page_size=hst.integers(1, 8))
+def test_full_drain_restores_pool(lens, page_size):
+    """Admit-all / free-all round trip leaves the pool exactly full."""
+    total = sum(pages_for(n, page_size) for n in lens)
+    alloc = PageAllocator(max(total, 1), page_size)
+    for i, n in enumerate(lens):
+        assert alloc.alloc(i, n) is not None
+    assert alloc.pages_in_use == total
+    for i in range(len(lens)):
+        alloc.free(i)
+    assert alloc.free_pages == alloc.num_pages
+    assert alloc.pages_in_use == 0

@@ -1,7 +1,13 @@
 """Serving engine: batched slot-table decode produces the same tokens as
 sequential greedy decoding with exactly ONE jitted decode program, and the
 admission/termination edge cases (max_new=1, EOS at prefill, prompt at
-capacity, queue churn, max_steps truncation) are honored."""
+capacity, queue churn, max_steps truncation) are honored.
+
+The termination/capacity edge cases are parametrized over BOTH KV
+layouts — dense per-slot rows and the paged block-table pool — since
+admission is where the layouts differ (rows vs free-list pages).
+test_serve_paged.py holds the paged-specific suite (fragmentation,
+allocator invariants, enc-dec serving)."""
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -38,10 +44,12 @@ def _sequential(params, cfg, prompts, new):
     return out
 
 
-def test_engine_matches_sequential_greedy_one_trace():
+@pytest.mark.parametrize("paged", [False, True])
+def test_engine_matches_sequential_greedy_one_trace(paged):
     """Batched-vs-sequential parity across staggered admissions AND the
     one-program property: the whole run traces exactly one decode step and
-    at most one prefill per bucket, regardless of slot occupancy."""
+    at most one prefill per bucket, regardless of slot occupancy — on both
+    KV layouts."""
     params = _params(CFG)
     rng = np.random.default_rng(0)
     prompts = [rng.integers(0, CFG.vocab_size, size=(n,)).astype(np.int32)
@@ -50,7 +58,7 @@ def test_engine_matches_sequential_greedy_one_trace():
     expected = _sequential(params, CFG, prompts, new)
 
     # 2 slots, 5 requests -> forced queueing + slot reuse at mixed depths
-    eng = ServeEngine(CFG, params, slots=2, max_len=64)
+    eng = ServeEngine(CFG, params, slots=2, max_len=64, paged=paged)
     for i, p in enumerate(prompts):
         eng.submit(i, p, max_new=new)
     results = eng.run()
@@ -162,20 +170,23 @@ def test_engine_moe_batched_serves_all():
     assert eng.stats["decode_traces"] == 1
 
 
-def test_engine_respects_max_len():
+@pytest.mark.parametrize("paged", [False, True])
+def test_engine_respects_max_len(paged):
     params = _params(CFG, seed=1)
-    eng = ServeEngine(CFG, params, slots=1, max_len=12)
+    eng = ServeEngine(CFG, params, slots=1, max_len=12, paged=paged)
     eng.submit(0, np.arange(8, dtype=np.int32), max_new=100)
     out = eng.run()
     assert out[0].done
     assert len(out[0].out) == 12 - 8 + 1   # capacity-bound, not clamped
 
 
-def test_prompt_at_capacity_edge():
-    """prompt_len == max_len - 1: exactly one row left, so prefill token +
-    one decoded token come back and the cache never writes out of range."""
+@pytest.mark.parametrize("paged", [False, True])
+def test_prompt_at_capacity_edge(paged):
+    """prompt_len == max_len - 1: exactly one position left, so prefill
+    token + one decoded token come back and the cache never writes out of
+    range (dense: last row; paged: last offset of the last page)."""
     params = _params(CFG, seed=1)
-    eng = ServeEngine(CFG, params, slots=1, max_len=12)
+    eng = ServeEngine(CFG, params, slots=1, max_len=12, paged=paged)
     eng.submit(0, np.arange(11, dtype=np.int32), max_new=100)
     out = eng.run()
     assert out[0].done
@@ -196,26 +207,32 @@ def test_submit_validates_inputs():
     assert not eng.queue                            # nothing was admitted
 
 
-def test_max_new_one_emits_exactly_one_token():
-    """max_new=1 finishes at admission: one token out, zero decode calls."""
+@pytest.mark.parametrize("paged", [False, True])
+def test_max_new_one_emits_exactly_one_token(paged):
+    """max_new=1 finishes at admission: one token out, zero decode calls
+    (and on the paged layout, its pages are back in the free-list)."""
     params = _params(CFG)
     prompt = np.arange(5, dtype=np.int32)
     first = _sequential(params, CFG, [prompt], 1)[0]
-    eng = ServeEngine(CFG, params, slots=2, max_len=64)
+    eng = ServeEngine(CFG, params, slots=2, max_len=64, paged=paged)
     eng.submit(0, prompt, max_new=1)
     out = eng.run()
     assert out[0].done
     assert out[0].out == first
     assert eng.stats["decode_steps"] == 0
+    if paged:
+        assert eng._alloc.pages_in_use == 0
 
 
-def test_eos_on_prefill_token():
+@pytest.mark.parametrize("paged", [False, True])
+def test_eos_on_prefill_token(paged):
     """EOS sampled at prefill ends the request immediately (len 1, no
     decode), and the slot is free for the next request in the same admit."""
     params = _params(CFG)
     prompt = np.arange(7, dtype=np.int32)
     first = _sequential(params, CFG, [prompt], 1)[0][0]
-    eng = ServeEngine(CFG, params, slots=1, max_len=64, eos_id=first)
+    eng = ServeEngine(CFG, params, slots=1, max_len=64, eos_id=first,
+                      paged=paged)
     eng.submit(0, prompt, max_new=50)
     out = eng.run()
     assert out[0].done
@@ -223,24 +240,27 @@ def test_eos_on_prefill_token():
     assert eng.stats["decode_steps"] == 0
 
 
-def test_eos_mid_decode():
+@pytest.mark.parametrize("paged", [False, True])
+def test_eos_mid_decode(paged):
     """Output length is exactly min(max_new, tokens-until-EOS)."""
     params = _params(CFG)
     prompt = np.arange(6, dtype=np.int32)
     ref = _sequential(params, CFG, [prompt], 10)[0]
     eos = ref[3]                                    # hit at decode step 3
-    eng = ServeEngine(CFG, params, slots=1, max_len=64, eos_id=eos)
+    eng = ServeEngine(CFG, params, slots=1, max_len=64, eos_id=eos,
+                      paged=paged)
     eng.submit(0, prompt, max_new=10)
     out = eng.run()
     assert out[0].done
     assert out[0].out == ref[:4]                    # EOS token included
 
 
-def test_run_returns_partials_on_max_steps():
+@pytest.mark.parametrize("paged", [False, True])
+def test_run_returns_partials_on_max_steps(paged):
     """Exhausting max_steps surfaces active requests' partial output and
     queued requests' empty output with done=False — nothing vanishes."""
     params = _params(CFG)
-    eng = ServeEngine(CFG, params, slots=1, max_len=64)
+    eng = ServeEngine(CFG, params, slots=1, max_len=64, paged=paged)
     eng.submit(0, np.arange(5, dtype=np.int32), max_new=50)
     eng.submit(1, np.arange(6, dtype=np.int32), max_new=50)
     results = eng.run(max_steps=3)

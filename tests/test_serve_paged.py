@@ -1,0 +1,265 @@
+"""Paged KV-cache serving: the block-table engine is token-identical to
+the dense engine (and to sequential greedy decoding) on every
+full-attention arch, keeps the one-decode-trace property, packs short
+requests where dense rows strand memory, and falls back to dense for
+ring/SSM archs. Plus a seeded (hypothesis-free) churn check of the page
+allocator's invariants — the @given variant is tests/test_paged_allocator.py.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import ModelConfig
+from repro.core.strategy import Strategy
+from repro.models import get_model
+from repro.serve.engine import ServeEngine
+from repro.serve.paging import PageAllocator, pages_for
+from repro.serve.step import greedy_generate
+
+CFG = ModelConfig(name="paged-dense", arch_type="dense", num_layers=2,
+                  d_model=128, num_heads=4, num_kv_heads=2, d_ff=256,
+                  vocab_size=128, dtype="float32")
+
+MOE_CFG = ModelConfig(name="paged-moe", arch_type="moe", num_layers=2,
+                      d_model=64, num_heads=4, num_kv_heads=2, d_ff=128,
+                      num_experts=4, experts_per_token=2, vocab_size=128,
+                      dtype="float32")
+
+AUDIO_CFG = ModelConfig(name="paged-encdec", arch_type="audio",
+                        num_layers=2, d_model=64, num_heads=4,
+                        num_kv_heads=4, d_ff=128, vocab_size=128,
+                        encoder_layers=1, encoder_ctx=12, dtype="float32")
+
+
+def _params(cfg, seed=0):
+    return get_model(cfg).init(jax.random.key(seed), cfg)
+
+
+def _serve(cfg, params, prompts, new, *, frames=None, slots=2, max_len=64,
+           **kw):
+    eng = ServeEngine(cfg, params, slots=slots, max_len=max_len, **kw)
+    for i, p in enumerate(prompts):
+        eng.submit(i, p, max_new=new,
+                   frames=None if frames is None else frames[i])
+    results = eng.run()
+    return {i: results[i].out for i in results}, eng
+
+
+# ------------------------------------------------------------------ parity
+
+def test_paged_matches_dense_and_sequential_transformer():
+    """Dense arch: paged vs dense engines vs per-request greedy decode are
+    token-identical across staggered admissions, one decode trace each."""
+    params = _params(CFG)
+    rng = np.random.default_rng(0)
+    prompts = [rng.integers(0, CFG.vocab_size, size=(n,)).astype(np.int32)
+               for n in (5, 9, 7, 6, 11)]
+    seq = {}
+    for i, p in enumerate(prompts):
+        toks = greedy_generate(params, CFG, Strategy(),
+                               {"tokens": jnp.asarray(p)[None]}, steps=6)
+        seq[i] = [int(t) for t in toks[0]]
+    dense, de = _serve(CFG, params, prompts, 6, paged=False)
+    paged, pe = _serve(CFG, params, prompts, 6, paged=True, page_size=16)
+    assert not de.paged and pe.paged
+    assert dense == seq
+    assert paged == seq
+    assert de.stats["decode_traces"] == 1
+    assert pe.stats["decode_traces"] == 1
+
+
+def test_paged_matches_dense_moe():
+    """MoE: with ONE slot every decode batch is a single always-active row,
+    so capacity routing sees identical inputs under both layouts and
+    outputs match exactly. (With >1 slot, parity is NOT structurally
+    guaranteed: an INACTIVE row attends stale per-slot KV under the dense
+    layout but null-page scratch under the paged one, and capacity-based
+    routing couples its garbage token to the active rows' expert budget —
+    so the multi-slot check only asserts serving completeness.)"""
+    params = _params(MOE_CFG, seed=5)
+    rng = np.random.default_rng(6)
+    prompts = [rng.integers(0, MOE_CFG.vocab_size,
+                            size=(int(rng.integers(3, 10)),)).astype(np.int32)
+               for _ in range(5)]
+    dense, _ = _serve(MOE_CFG, params, prompts, 4, slots=1, max_len=32,
+                      paged=False)
+    paged, pe = _serve(MOE_CFG, params, prompts, 4, slots=1, max_len=32,
+                       paged=True, page_size=8)
+    assert dense == paged
+    assert pe.stats["decode_traces"] == 1
+
+    batched, be = _serve(MOE_CFG, params, prompts, 4, slots=3, max_len=32,
+                         paged=True, page_size=8)
+    assert set(batched) == set(range(5))
+    assert all(0 <= t < MOE_CFG.vocab_size
+               for out in batched.values() for t in out)
+    assert be.stats["decode_traces"] == 1
+
+
+def test_paged_matches_dense_and_sequential_encdec():
+    """Enc-dec (audio) serving: per-request frame embeddings ride through
+    prefill, the decoder KV pages, the cross-KV stays per-slot — outputs
+    match sequential greedy decode exactly on both layouts."""
+    params = _params(AUDIO_CFG, seed=2)
+    rng = np.random.default_rng(2)
+    prompts = [rng.integers(0, AUDIO_CFG.vocab_size,
+                            size=(n,)).astype(np.int32) for n in (4, 7, 5)]
+    frames = [rng.standard_normal(
+        (AUDIO_CFG.encoder_ctx, AUDIO_CFG.d_model)).astype(np.float32)
+        for _ in prompts]
+    seq = {}
+    for i, (p, f) in enumerate(zip(prompts, frames)):
+        toks = greedy_generate(
+            params, AUDIO_CFG, Strategy(),
+            {"tokens": jnp.asarray(p)[None], "frames": jnp.asarray(f)[None]},
+            steps=5)
+        seq[i] = [int(t) for t in toks[0]]
+    dense, de = _serve(AUDIO_CFG, params, prompts, 5, frames=frames,
+                       max_len=32, paged=False)
+    paged, pe = _serve(AUDIO_CFG, params, prompts, 5, frames=frames,
+                       max_len=32, paged=True, page_size=8)
+    assert dense == seq
+    assert paged == seq
+    assert de.stats["decode_traces"] == 1
+    assert pe.stats["decode_traces"] == 1
+
+
+# ------------------------------------------------------------ fragmentation
+
+def test_paged_fragmentation_8_short_prompts_where_dense_fits_2():
+    """Equal token budget (2 * max_len = 128 cache tokens): the dense
+    layout spends it on 2 whole rows -> 2 concurrent requests; the paged
+    pool spends it on 16-token pages -> all 8 short requests resident at
+    once, outputs still identical."""
+    params = _params(CFG, seed=1)
+    rng = np.random.default_rng(1)
+    prompts = [rng.integers(0, CFG.vocab_size, size=(10,)).astype(np.int32)
+               for _ in range(8)]
+    dense = ServeEngine(CFG, params, slots=2, max_len=64, paged=False)
+    paged = ServeEngine(CFG, params, slots=8, max_len=64, paged=True,
+                        page_size=16, kv_pages=8)     # 8*16 == 2*64 tokens
+    for i, p in enumerate(prompts):
+        dense.submit(i, p, max_new=6)
+        paged.submit(i, p, max_new=6)        # ctx_cap 15 -> 1 page each
+    dense.step()
+    paged.step()
+    assert sum(r is not None for r in dense.active) == 2
+    assert sum(r is not None for r in paged.active) == 8
+    rd, rp = dense.run(), paged.run()
+    assert all(rd[i].done and rp[i].done for i in range(8))
+    assert all(rd[i].out == rp[i].out for i in range(8))
+    assert paged.stats["decode_traces"] == 1
+    # same token budget on the pool side (+1 page: the null/scratch page)
+    assert paged.kv_pages * paged.page_size == 2 * 64
+    per_token_dense = dense.kv_bytes() / (2 * 64)
+    assert paged.kv_bytes() == pytest.approx(
+        per_token_dense * (paged.kv_pages + 1) * paged.page_size)
+
+
+def test_paged_pool_releases_pages_and_backpressures():
+    """A pool smaller than the workload serializes admission (head-of-line
+    waits for retirements) but never deadlocks, never double-books pages,
+    and drains back to an empty pool."""
+    params = _params(CFG, seed=1)
+    rng = np.random.default_rng(3)
+    eng = ServeEngine(CFG, params, slots=4, max_len=64, paged=True,
+                      page_size=16, kv_pages=3)       # room for ~1.5 reqs
+    for i in range(6):
+        eng.submit(i, rng.integers(0, CFG.vocab_size,
+                                   size=(int(rng.integers(3, 12)),)),
+                   max_new=5)                         # ctx_cap <= 16+
+    results = eng.run()
+    assert all(results[i].done for i in range(6))
+    assert eng._alloc.pages_in_use == 0
+    assert eng._alloc.free_pages == eng.kv_pages
+    assert (eng._ptab == 0).all()
+    assert eng.stats["decode_traces"] == 1
+
+
+# ----------------------------------------------------- layout selection/API
+
+def test_paged_auto_fallback_swa_and_ssm():
+    swa_cfg = CFG.with_(name="paged-swa", sliding_window=8)
+    eng = ServeEngine(swa_cfg, _params(swa_cfg, seed=3), slots=2, max_len=32)
+    assert not eng.paged                       # ring cache keeps dense rows
+    ssm_cfg = ModelConfig(name="paged-ssm", arch_type="ssm", num_layers=2,
+                          d_model=64, num_heads=0, num_kv_heads=0, d_ff=128,
+                          ssm_state=16, ssm_heads=4, ssm_head_dim=16,
+                          vocab_size=128, dtype="float32")
+    eng = ServeEngine(ssm_cfg, _params(ssm_cfg, seed=4), slots=2, max_len=32)
+    assert not eng.paged
+    with pytest.raises(ValueError, match="paged KV"):
+        ServeEngine(swa_cfg, _params(swa_cfg, seed=3), slots=2, max_len=32,
+                    paged=True)
+
+
+def test_submit_rejects_pool_overflow_with_page_message():
+    """A request whose worst-case context can NEVER fit the pool is
+    rejected at submit with a page-denominated message (not 'cache row')."""
+    params = _params(CFG, seed=1)
+    eng = ServeEngine(CFG, params, slots=2, max_len=64, paged=True,
+                      page_size=16, kv_pages=2)
+    with pytest.raises(ValueError, match="KV pages"):
+        eng.submit(0, np.arange(30, dtype=np.int32), max_new=30)
+    eng.submit(1, np.arange(20, dtype=np.int32), max_new=10)  # 2 pages: ok
+    assert len(eng.queue) == 1
+
+
+def test_audio_frames_validation():
+    params = _params(AUDIO_CFG, seed=2)
+    eng = ServeEngine(AUDIO_CFG, params, slots=1, max_len=32)
+    with pytest.raises(ValueError, match="frames"):
+        eng.submit(0, np.arange(4, dtype=np.int32), max_new=2)
+    with pytest.raises(ValueError, match="shape"):
+        eng.submit(0, np.arange(4, dtype=np.int32), max_new=2,
+                   frames=np.zeros((3, 3), np.float32))
+    dense_eng = ServeEngine(CFG, _params(CFG), slots=1, max_len=32)
+    with pytest.raises(ValueError, match="audio"):
+        dense_eng.submit(0, np.arange(4, dtype=np.int32), max_new=2,
+                         frames=np.zeros((12, 64), np.float32))
+
+
+# ------------------------------------------- allocator churn (no hypothesis)
+
+def test_allocator_seeded_churn_invariants():
+    """Seeded random alloc/extend/free churn (the hypothesis-free twin of
+    test_paged_allocator.py): ownership is exclusive, frees are complete,
+    pages-in-use tracks sum(ceil(len/page_size)) exactly."""
+    rng = np.random.default_rng(42)
+    for trial in range(20):
+        num_pages = int(rng.integers(1, 14))
+        page_size = int(rng.integers(1, 9))
+        alloc = PageAllocator(num_pages, page_size, first_page=1)
+        lens = {}
+        for _ in range(150):
+            op = rng.choice(["alloc", "extend", "free"])
+            owner = int(rng.integers(0, 5))
+            n = int(rng.integers(0, 40))
+            if op == "alloc" and owner not in lens:
+                got = alloc.alloc(owner, n)
+                fits = (sum(pages_for(v, page_size) for v in lens.values())
+                        + pages_for(n, page_size)) <= num_pages
+                assert (got is not None) == fits
+                if got is not None:
+                    lens[owner] = n
+            elif op == "extend" and owner in lens:
+                new_len = lens[owner] + n
+                extra = (pages_for(new_len, page_size)
+                         - pages_for(lens[owner], page_size))
+                got = alloc.extend(owner, new_len)
+                fits = extra <= alloc.num_pages - sum(
+                    pages_for(v, page_size) for v in lens.values())
+                assert (got is not None) == fits
+                if got is not None:
+                    lens[owner] = new_len
+            elif op == "free" and owner in lens:
+                freed = alloc.free(owner)
+                assert len(freed) == pages_for(lens.pop(owner), page_size)
+            # invariants
+            owned = [p for o in list(alloc.owners())
+                     for p in alloc.pages_of(o)]
+            assert len(owned) == len(set(owned))
+            assert alloc.free_pages + len(owned) == num_pages
+            assert alloc.pages_in_use == sum(
+                pages_for(v, page_size) for v in lens.values())
