@@ -42,9 +42,11 @@ def _workload(rng, n_requests):
 
 def bench(params, *, slots: int, n_requests: int, max_new: int,
           max_len: int = 64, seed: int = 0, paged: bool = False,
-          page_size: int = 16, kv_pages=None) -> dict:
+          page_size: int = 16, kv_pages=None, prefix_cache: bool = False,
+          lazy: bool = False) -> dict:
     eng = ServeEngine(TINY, params, slots=slots, max_len=max_len,
-                      paged=paged, page_size=page_size, kv_pages=kv_pages)
+                      paged=paged, page_size=page_size, kv_pages=kv_pages,
+                      prefix_cache=prefix_cache, lazy=lazy)
     rng = np.random.default_rng(seed)
     prompts = _workload(rng, n_requests)
 
@@ -71,6 +73,13 @@ def bench(params, *, slots: int, n_requests: int, max_new: int,
         "prefill_traces": eng.stats["prefill_traces"],
         "paged": eng.paged,
         "peak_kv_bytes": eng.kv_bytes(),
+        # pool telemetry (zeros on the dense layout / with sharing off)
+        "pages_in_use": eng.stats["pages_in_use"],
+        "peak_pages": eng.stats["peak_pages"],
+        "prefix_hit_blocks": eng.stats["prefix_hit_blocks"],
+        "prefix_miss_blocks": eng.stats["prefix_miss_blocks"],
+        "preemptions": eng.stats["preemptions"],
+        "cow_copies": eng.stats["cow_copies"],
     }
 
 

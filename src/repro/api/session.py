@@ -140,8 +140,9 @@ class Session:
     def serve(self, *, slots: int = 4, max_len: int = 256,
               eos_id: Optional[int] = None, temperature: float = 0.0,
               seed: Optional[int] = None, paged: Optional[bool] = None,
-              page_size: int = 16,
-              kv_pages: Optional[int] = None) -> ServeEngine:
+              page_size: int = 16, kv_pages: Optional[int] = None,
+              prefix_cache: bool = False, lazy: bool = False,
+              scheduler=None) -> ServeEngine:
         """Continuous-batching engine over this session's params: one
         batched jitted decode advances the whole slot table per step.
         ``temperature > 0`` switches the on-device sampler from greedy to
@@ -158,13 +159,26 @@ class Session:
         do across occupancies. ``page_size`` tokens per page;
         ``kv_pages`` bounds the shared pool (default: capacity parity
         with dense, ``slots * ceil(max_len / page_size)``) — size it below
-        that to trade worst-case admission for HBM."""
+        that to trade worst-case admission for HBM.
+
+        Multi-tenant pool features (paged layout, all off by default):
+        ``prefix_cache=True`` shares one physical copy of a common prompt
+        prefix across requests via refcounted pages (exact — see the
+        engine docstring for the MoE/enc-dec keying); ``lazy=True``
+        reserves only the pages covering the prompt plus its first
+        decode write at admission and grows on
+        page-boundary crossings, preempting-and-requeuing the
+        least-progress slot when the pool runs dry (greedy outputs stay
+        bit-identical); ``scheduler`` overrides the admission/preemption
+        policy (default: FIFO + least-progress-preempt,
+        serve/scheduler.py)."""
         return ServeEngine(self.cfg, self.params, slots=slots,
                            max_len=max_len, eos_id=eos_id,
                            temperature=temperature,
                            seed=self.seed if seed is None else seed,
                            paged=paged, page_size=page_size,
-                           kv_pages=kv_pages)
+                           kv_pages=kv_pages, prefix_cache=prefix_cache,
+                           lazy=lazy, scheduler=scheduler)
 
     # ------------------------------------------------------------- dryrun
     def dryrun(self, shape: ShapeLike, *, verbose: bool = False,

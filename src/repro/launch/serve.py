@@ -7,8 +7,12 @@ stream a synthetic request workload through it.
 
 The engine defaults to the paged (block-table) KV cache wherever it is
 exact; ``--dense`` forces the contiguous per-slot layout, ``--page-size``
-/ ``--kv-pages`` shape the paged pool. Audio (enc-dec) archs serve with
-synthetic frame embeddings standing in for the stubbed mel+conv frontend.
+/ ``--kv-pages`` shape the paged pool, ``--prefix-cache`` shares common
+prompt prefixes copy-on-write (pair with ``--shared-prefix N`` for a
+visible hit rate), and ``--lazy`` grows reservations on page-boundary
+crossings with preempt/requeue under pressure. Audio (enc-dec) archs
+serve with synthetic frame embeddings standing in for the stubbed
+mel+conv frontend.
 """
 from __future__ import annotations
 
@@ -38,6 +42,17 @@ def main():
     ap.add_argument("--kv-pages", type=int, default=None,
                     help="shared pool size in pages (default: dense-"
                          "capacity parity, slots*ceil(max_len/page_size))")
+    ap.add_argument("--prefix-cache", action="store_true",
+                    help="share one physical copy of common prompt "
+                         "prefixes via refcounted pages (paged layout)")
+    ap.add_argument("--lazy", action="store_true",
+                    help="lazy page growth: reserve prompt + one decode "
+                         "page at admission, grow on page-boundary "
+                         "crossings, preempt/requeue when the pool runs "
+                         "dry (paged layout)")
+    ap.add_argument("--shared-prefix", type=int, default=0, metavar="N",
+                    help="prepend the same N-token system prompt to every "
+                         "request (demonstrates --prefix-cache sharing)")
     args = ap.parse_args()
 
     cfg = get_smoke(args.arch).with_(dtype="float32")
@@ -49,15 +64,18 @@ def main():
     eng = session.serve(slots=args.slots, max_len=args.max_len,
                         temperature=args.temperature,
                         paged=False if args.dense else None,
-                        page_size=args.page_size, kv_pages=args.kv_pages)
+                        page_size=args.page_size, kv_pages=args.kv_pages,
+                        prefix_cache=args.prefix_cache, lazy=args.lazy)
 
     rng = np.random.default_rng(0)
+    system = rng.integers(0, cfg.vocab_size, size=(args.shared_prefix,))
     for rid in range(args.requests):
         n = int(rng.integers(4, 16))
         frames = (rng.standard_normal((cfg.encoder_ctx, cfg.d_model))
                   .astype(np.float32) if cfg.arch_type == "audio" else None)
-        eng.submit(rid, rng.integers(0, cfg.vocab_size, size=(n,)),
-                   max_new=args.max_new, frames=frames)
+        prompt = np.concatenate(
+            [system, rng.integers(0, cfg.vocab_size, size=(n,))])
+        eng.submit(rid, prompt, max_new=args.max_new, frames=frames)
 
     t0 = time.time()
     results = eng.run()
@@ -69,6 +87,15 @@ def main():
           f"{layout} kv {eng.kv_bytes() / 1e6:.1f}MB, "
           f"{eng.stats['decode_steps']} decode calls, "
           f"{eng.stats['decode_traces']} decode trace)")
+    if eng.paged:
+        st = eng.stats
+        print(f"  pool: peak {st['peak_pages']}/{eng.kv_pages} pages, "
+              f"prefix hit/miss {st['prefix_hit_blocks']}/"
+              f"{st['prefix_miss_blocks']} blocks "
+              f"(+{st['prefix_tail_hits']} tail), "
+              f"{st['preemptions']} preemptions, "
+              f"{st['cow_copies']} CoW copies, "
+              f"{st['prefix_evictions']} evictions")
     for rid in sorted(results):
         r = results[rid]
         print(f"  req {rid}{'' if r.done else ' [truncated]'}: {r.out}")

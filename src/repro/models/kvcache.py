@@ -52,6 +52,12 @@ Token ``p`` of slot ``b`` therefore lives at
 WHICH pages a slot owns is host-side bookkeeping
 (``serve/paging.PageAllocator``); the device never sees the free-list,
 only the table values, so admission/churn never retraces the step.
+
+Prefix sharing (serve/prefix.py) rides on the same property: a page may
+appear in SEVERAL slots' table rows (a common prompt prefix held once),
+and only table values change, so decode still traces exactly once. The
+one device-side addition is ``copy_page`` — the copy-on-write step that
+duplicates a shared page's contents before a writer appends into it.
 """
 from __future__ import annotations
 
@@ -91,6 +97,15 @@ def write_kv_paged(cache, k_new, v_new, page_table, pos):
     cache["k"] = cache["k"].at[page, off].set(k_new[:, 0])
     cache["v"] = cache["v"].at[page, off].set(v_new[:, 0])
     return cache
+
+
+def copy_page(pool, src, dst):
+    """Copy one physical page's contents, all layers at once — the device
+    half of copy-on-write (the allocator swaps the table entry, this moves
+    the KV). pool leaves: (L, n_pages, page_size, Hkv, D); src/dst:
+    scalar page ids (traced values, so ONE program covers every copy)."""
+    return {"k": pool["k"].at[:, dst].set(pool["k"][:, src]),
+            "v": pool["v"].at[:, dst].set(pool["v"][:, src])}
 
 
 def gather_pages(pool, page_table):

@@ -13,28 +13,63 @@ KV layouts (models/kvcache.py):
 
   * PAGED (default where supported — vLLM-style block tables): one flat
     pool of ``page_size``-token pages shared by every slot, plus a
-    per-slot page table. Admission reserves
-    ``ceil(min(prompt + max_new - 1, max_len) / page_size)`` pages from a
-    host-side free-list (serve/paging.py) and frees them when the request
-    retires, so a short request holds pages for ITS context, not a dense
-    ``max_len`` row — under a fixed HBM budget the paged pool admits
-    ~``max_len / ctx`` times more concurrent short requests. The page
-    table is a device array whose VALUES change at admission/retire while
-    its shape never does, so the whole run still traces exactly one
-    decode program.
+    per-slot page table. Admission reserves pages from a host-side
+    refcounted free-list (serve/paging.py) and releases them when the
+    request retires, so a short request holds pages for ITS context, not
+    a dense ``max_len`` row. The page table is a device array whose
+    VALUES change at admission/retire while its shape never does, so the
+    whole run still traces exactly one decode program.
   * DENSE (``paged=False``, and the automatic fallback): one contiguous
     ``max_len`` (or ring-window) row per slot. Sliding-window (ring) and
     SSM/hybrid archs keep this layout — a ring cache is already O(window)
     and the SSM state is O(1), so pages would add indirection for no
     memory win.
 
+On the paged layout three independent features stack (all off by
+default, preserving the PR 3 worst-case-reservation behaviour):
+
+  * ``prefix_cache=True`` — a radix tree over page-aligned token blocks
+    (serve/prefix.py) maps shared prompt prefixes to refcounted pool
+    pages, so N requests with a common system prompt hold ONE physical
+    copy. Exact for dense decoders (causal KV depends only on the
+    prefix); enc-dec keys additionally on a digest of the request's
+    frames, and MoE on a digest of the full context (capacity routing
+    makes block KV portable only between identical contexts). Registered
+    pages stay resident after their owner retires (cheap re-prefill for
+    repeat prompts and preempted victims) and are evicted LRU-first
+    under pool pressure.
+  * ``lazy=True`` — admission reserves only ``ceil((len(prompt +
+    emitted) + 1) / page_size)`` pages — the prompt plus its first
+    decode write, one page beyond the prompt's only when it ends on a
+    page boundary — instead of the worst-case
+    ``ceil((prompt + max_new - 1) / page_size)``;
+    ``step`` grows the reservation when a slot's cursor crosses a page
+    boundary. The pool can now run dry MID-DECODE: the engine then
+    evicts cold prefix pages and, if still short, PREEMPTS the
+    least-progress slot (serve/scheduler.py) — the victim's private
+    pages are freed (prefix pages merely drop a reference), and the
+    request is requeued at the FIFO head with its partial output; its
+    re-prefill over prompt+output resumes decoding exactly (greedy
+    decode is bit-identical to the uninterrupted run). Lazy mode also
+    unlocks partial-tail prefix hits, whose adopted page is duplicated
+    by COPY-ON-WRITE (``allocator.cow`` + ``kvcache.copy_page``) before
+    the slot's first decode write lands in it.
+  * ``scheduler=`` — the admission/preemption policy object; the default
+    ``FifoLeastProgress`` keeps FIFO head-of-line admission and preempts
+    the fewest-generated-tokens slot first.
+
+All of it is host-side bookkeeping plus page-table VALUES — prefill and
+decode stay exactly one trace each, sharing or not (asserted by the CI
+paged-serve smoke and tests/test_serve_prefix.py).
+
 Admission fills free slots from a FIFO queue between steps (the standard
 orca/vllm outer loop). Prefill pads prompts to power-of-two buckets
 (serve/step.prefill_bucket) so XLA retraces at most log2(max_len) prefill
 shapes; paged prefill additionally rounds the bucket up to whole pages
-and scatters the fresh KV page-wise (serve/step.scatter_prefill_pages).
-Sampling (greedy or temperature) runs on device inside the same jitted
-step (serve/sampling.py).
+and scatters the fresh KV page-wise (serve/step.scatter_prefill_pages),
+skipping blocks the prefix cache already holds. Sampling (greedy or
+temperature) runs on device inside the same jitted step
+(serve/sampling.py).
 
 Caveats: MoE archs skip prompt bucketing, and their batched decode can
 differ from single-request decode — capacity-based expert routing couples
@@ -44,17 +79,27 @@ sequential decoding. Enc-dec (audio) requests must carry precomputed
 frame embeddings (``submit(..., frames=...)`` — the mel+conv frontend is
 the assignment's allowed stub); their decoder KV pages like any dense
 decoder while the cross-attention KV stays one fixed-size block per slot.
+Preemption keeps greedy outputs bit-identical for row-independent archs
+(resume-by-re-prefill recomputes exactly the KV the victim held); MoE
+extends its standing caveat — a re-prefill routes the whole context under
+prefill capacity, where the uninterrupted run would have routed the tail
+token-by-token — and with ``temperature > 0`` a preempted request resumes
+on a different rng draw (stochastic either way).
 
 ``engine.stats`` counts device calls AND traces (``decode_traces`` /
 ``prefill_traces`` increment only while tracing), so tests can assert the
-one-program property directly.
+one-program property directly — plus pool telemetry: ``pages_in_use`` /
+``peak_pages``, prefix-cache ``prefix_hit_blocks`` /
+``prefix_miss_blocks`` / ``prefix_tail_hits`` / ``prefix_evictions``,
+``preemptions`` and ``cow_copies``.
 
 Preferred construction: ``repro.api.Session.serve(slots=..., max_len=...,
-page_size=...)`` — the Session supplies the params so callers never
-thread param trees by hand.
+page_size=..., prefix_cache=..., lazy=...)`` — the Session supplies the
+params so callers never thread param trees by hand.
 """
 from __future__ import annotations
 
+import hashlib
 from collections import deque
 from dataclasses import dataclass, field
 from typing import Deque, Dict, List, Optional
@@ -65,7 +110,9 @@ import numpy as np
 
 from repro.models import get_model, kvcache
 from repro.serve.paging import PageAllocator, pages_for
+from repro.serve.prefix import PrefixCache
 from repro.serve.sampling import sample_tokens
+from repro.serve.scheduler import FifoLeastProgress
 from repro.serve.step import prefill_bucket, scatter_prefill_pages
 
 #: archs the token-only engine can serve without per-request extras.
@@ -80,38 +127,58 @@ PAGEABLE_ARCHS = ("dense", "moe", "audio")
 class Request:
     """One request's lifecycle record; ``run()`` returns these so callers
     can distinguish completion (``done=True``) from truncation by
-    ``max_steps`` (``done=False`` with partial/empty ``out``)."""
+    ``max_steps`` (``done=False`` with partial/empty ``out``). A preempted
+    request keeps its partial ``out`` while requeued — re-admission
+    prefills over prompt+out and resumes."""
     rid: int
     prompt: np.ndarray                 # (len,) int32
     max_new: int
     out: List[int] = field(default_factory=list)
     done: bool = False
     frames: Optional[np.ndarray] = None   # (enc_ctx, d_model), audio archs
+    # memoized (ctx_len, salt) — a backpressured head-of-line request
+    # re-places every step and must not re-hash its frames/context
+    salt_cache: Optional[tuple] = field(default=None, repr=False)
 
 
 class ServeEngine:
     def __init__(self, cfg, params, *, slots: int = 4, max_len: int = 256,
                  eos_id: Optional[int] = None, temperature: float = 0.0,
                  seed: int = 0, paged: Optional[bool] = None,
-                 page_size: int = 16, kv_pages: Optional[int] = None):
+                 page_size: int = 16, kv_pages: Optional[int] = None,
+                 prefix_cache: bool = False, lazy: bool = False,
+                 scheduler=None):
         if cfg.arch_type not in SERVABLE_ARCHS:
             raise ValueError(
                 f"{cfg.name}: the engine drives token/frame decoders "
                 f"({'/'.join(SERVABLE_ARCHS)}), not {cfg.arch_type}")
         pageable = (cfg.arch_type in PAGEABLE_ARCHS
                     and cfg.sliding_window == 0)
+        if (prefix_cache or lazy) and not pageable:
+            raise ValueError(
+                f"{cfg.name}: prefix_cache/lazy ride on the paged KV "
+                f"pool, which needs a full-attention decoder "
+                f"({'/'.join(PAGEABLE_ARCHS)}, no sliding window) — "
+                f"unavailable for {cfg.arch_type}"
+                + (" + SWA ring" if cfg.sliding_window else ""))
         if paged is None:
             # auto: paged for every full-attention decoder. Exact vs dense
             # for row-independent archs; MoE keeps its standing batched-
             # routing caveat (see module docstring) under either layout.
-            paged = pageable
-        elif paged and not pageable:
+            # prefix_cache/lazy are paged-pool features, so requesting
+            # them resolves auto to paged.
+            paged = True if (prefix_cache or lazy) else pageable
+        if paged and not pageable:
             raise ValueError(
                 f"{cfg.name}: paged KV needs a full-attention decoder "
                 f"({'/'.join(PAGEABLE_ARCHS)}, no sliding window); "
                 f"{cfg.arch_type}"
                 + (" + SWA ring" if cfg.sliding_window else "")
                 + " keeps the dense layout (paged=False)")
+        if (prefix_cache or lazy) and not paged:
+            raise ValueError(
+                f"{cfg.name}: prefix_cache/lazy ride on the paged pool; "
+                "drop paged=False to use them")
         if page_size < 1:
             raise ValueError(f"page_size must be >= 1, got {page_size}")
         self.cfg, self.params = cfg, params
@@ -122,19 +189,28 @@ class ServeEngine:
         self.temperature = temperature
         self.paged = paged
         self.page_size = page_size
+        self.lazy = lazy
+        self.prefix_cache = prefix_cache
         # FIFO admission queue: deque so heavy-traffic admission stays O(1)
         # per pop (a list's pop(0) is O(n) in queued requests)
         self.queue: Deque[Request] = deque()
         self.active: List[Optional[Request]] = [None] * slots
         self.finished: Dict[int, Request] = {}
         self.stats = {"decode_steps": 0, "decode_traces": 0,
-                      "prefills": 0, "prefill_traces": 0}
+                      "prefills": 0, "prefill_traces": 0,
+                      "pages_in_use": 0, "peak_pages": 0,
+                      "prefix_hit_blocks": 0, "prefix_miss_blocks": 0,
+                      "prefix_tail_hits": 0, "prefix_evictions": 0,
+                      "preemptions": 0, "cow_copies": 0}
         self._rng = jax.random.key(seed)
+        self._sched = scheduler if scheduler is not None \
+            else FifoLeastProgress()
         # the slot table: one batched cache, per-slot position vector
         self._cache = self.model.init_cache(cfg, slots, max_len)
         self._cache["pos"] = jnp.zeros((slots,), jnp.int32)
         self._pos = np.zeros(slots, np.int64)    # host mirror: tokens in ctx
         self._last = np.zeros(slots, np.int64)   # host mirror: last token
+        self._prefix: Optional[PrefixCache] = None
         if paged:
             # swap the dense per-slot rows for a flat page pool + table;
             # page 0 is the null page (inactive-slot / padding scratch)
@@ -153,6 +229,10 @@ class ServeEngine:
             self._ptab_dirty = False
             self._alloc = PageAllocator(self.kv_pages, page_size,
                                         first_page=1)
+            if prefix_cache:
+                self._prefix = PrefixCache(self._alloc, page_size)
+            self._copy_page = jax.jit(kvcache.copy_page,
+                                      donate_argnums=(0,))
         # bucketing: attention masks make right-padding exact for dense;
         # MoE capacity routing and the SSM recurrence are perturbed by pad
         # tokens (and enc-dec prefill gathers no last_pos), so those archs
@@ -198,7 +278,9 @@ class ServeEngine:
         """Prefill one (bucket-padded) prompt, sample its first token, and
         store the fresh per-request cache: dense leaves scatter into
         slot-table row ``slot``; with the paged layout the decoder KV
-        scatters page-wise into the pool through ``pages`` instead.
+        scatters page-wise into the pool through ``pages`` instead (blocks
+        the prefix cache already holds are redirected to the null page —
+        their physical pages are shared and must never be rewritten).
         Retraces once per distinct padded length (= per bucket)."""
         self.stats["prefill_traces"] += 1
         if self.paged:
@@ -245,7 +327,10 @@ class ServeEngine:
         whose worst-case context needs more pages than the whole pool —
         instead of silently clamping writes. (Transient pressure is not a
         rejection: a request that merely has to WAIT for free pages or a
-        free slot stays queued.)"""
+        free slot stays queued. The worst-case bound holds under lazy
+        growth too: it is what guarantees preemption can always make a
+        lone request's extend succeed — the liveness argument in
+        serve/scheduler.py.)"""
         prompt = np.asarray(prompt, np.int32).reshape(-1)
         if prompt.size == 0:
             raise ValueError(f"request {rid}: empty prompt")
@@ -288,35 +373,135 @@ class ServeEngine:
                 return s
         return None
 
+    # ------------------------------------------------- paged bookkeeping
+    def _note_pool(self):
+        used = self._alloc.pages_in_use
+        self.stats["pages_in_use"] = used
+        if used > self.stats["peak_pages"]:
+            self.stats["peak_pages"] = used
+        if self._prefix is not None:
+            self.stats["prefix_hit_blocks"] = self._prefix.hit_blocks
+            self.stats["prefix_miss_blocks"] = self._prefix.miss_blocks
+            self.stats["prefix_tail_hits"] = self._prefix.tail_hits
+
+    def _salt(self, req: Request, ctx: np.ndarray):
+        """Prefix-cache namespace: blocks are only portable where causal
+        KV depends on the prefix alone — enc-dec KV also depends on the
+        frames, MoE capacity routing on the whole sequence, so those key
+        coarser (identical frames / identical full context). Memoized on
+        the request: frames never change, and ``ctx`` (prompt + emitted)
+        is uniquely determined by its length over a request's lifetime."""
+        if self.cfg.arch_type == "moe":
+            if req.salt_cache is None or req.salt_cache[0] != len(ctx):
+                req.salt_cache = (len(ctx), ("moe-ctx", hashlib.sha1(
+                    np.ascontiguousarray(ctx).tobytes()).hexdigest()))
+            return req.salt_cache[1]
+        if req.frames is not None:
+            if req.salt_cache is None:
+                req.salt_cache = (0, ("frames", hashlib.sha1(
+                    np.ascontiguousarray(req.frames).tobytes()).hexdigest()))
+            return req.salt_cache[1]
+        return None
+
+    def _place(self, s: int, req: Request, ctx: np.ndarray):
+        """Reserve slot ``s``'s pages for admission: prefix-cache match ->
+        adopt shared pages, then draw fresh ones (lazy: prompt + first
+        decode page; otherwise the worst case), evicting cold prefix
+        blocks when the free-list is short. Returns (block-ordered pages,
+        shared head count) or (None, 0) on backpressure."""
+        n = len(ctx)
+        if self.lazy:
+            # the context plus its first decode write — clamped to the
+            # request's remaining worst case, which submit() validated
+            # against the pool: a request finishing AT admission
+            # (max_new reached on the prefill token) never writes a
+            # decode token, so demanding its +1 page could deadlock a
+            # pool the worst case fits
+            reserve = min(n + 1, n + req.max_new - len(req.out) - 1,
+                          self.max_len)
+        else:
+            reserve = min(n + req.max_new - len(req.out) - 1, self.max_len)
+        shared: List[int] = []
+        salt = None
+        if self._prefix is not None:
+            salt = self._salt(req, ctx)
+            # partial-tail adoption forces a copy-on-write at the first
+            # decode write; only lazy mode has the mid-decode alloc path
+            # (and its reclaim ladder) to pay for that copy.
+            full_pages, tail_page, _ = self._prefix.match(
+                ctx, salt=salt, want_tail=self.lazy)
+            shared = list(full_pages)
+            if tail_page is not None:
+                shared.append(tail_page)
+        got = self._alloc.alloc(s, reserve, shared=shared)
+        if got is None and self._prefix is not None:
+            need = (pages_for(reserve, self.page_size) - len(shared)
+                    - self._alloc.free_pages)
+            keep = frozenset(shared)
+            # only spend cached blocks when evicting can actually cover
+            # the shortfall — otherwise the request waits for retirements
+            # anyway and the flushed blocks would have bought nothing
+            if 0 < need <= self._prefix.evictable_pages(keep=keep):
+                while need > 0 and self._prefix.evict_one(keep=keep):
+                    self.stats["prefix_evictions"] += 1
+                    need -= 1
+                got = self._alloc.alloc(s, reserve, shared=shared)
+        if got is None:
+            return None, 0
+        if self._prefix is not None:
+            # count reuse on SUCCESSFUL adoption only (a backpressured
+            # head-of-line request re-matches every step)
+            full = len(shared) - (1 if tail_page is not None else 0)
+            self._prefix.hit_blocks += full
+            self._prefix.miss_blocks += n // self.page_size - full
+            if tail_page is not None:
+                self._prefix.tail_hits += 1
+            # register this context's freshly written full blocks so the
+            # NEXT request (or this one's re-admission) shares them
+            self._prefix.insert(ctx, got, salt=salt)
+        self._note_pool()
+        return got, len(shared)
+
     def _admit(self):
-        while self.queue:
+        while True:
+            qi = self._sched.next_index(self.queue)
+            if qi is None:
+                return
             s = self._free_slot()
             if s is None:
                 return
-            req = self.queue[0]
-            n = len(req.prompt)
+            req = self.queue[qi]
+            # a preempted request resumes by prefilling prompt + emitted
+            ctx = req.prompt if not req.out else np.concatenate(
+                [req.prompt, np.asarray(req.out, np.int32)])
+            n = len(ctx)
             blen = prefill_bucket(n, cap=self._window) if self._bucketed \
                 else n
             pages = None
             if self.paged:
-                # reserve the request's worst-case context up front: no
-                # mid-decode allocation can fail, so no preemption path.
-                # FIFO head-of-line: when pages run short we WAIT for a
-                # retirement instead of admitting around the head.
-                ctx_cap = min(n + req.max_new - 1, self.max_len)
-                got = self._alloc.alloc(s, ctx_cap)
+                got, n_shared = self._place(s, req, ctx)
                 if got is None:
+                    # head-of-line: WAIT for retirements/evictions instead
+                    # of admitting around the scheduler's pick
                     return
                 self._ptab[s] = 0
                 self._ptab[s, :len(got)] = got
                 self._ptab_dirty = True
                 npb = pages_for(blen, self.page_size)
                 page_vec = np.zeros(npb, np.int64)
-                page_vec[:min(npb, len(got))] = got[:npb]
+                m = min(npb, len(got))
+                page_vec[:m] = got[:m]
+                # shared head pages already hold this prefix's KV — the
+                # prefill scatter must not rewrite pages other slots read;
+                # redirect those blocks to the null page
+                page_vec[:min(n_shared, npb)] = 0
                 pages = jnp.asarray(page_vec, jnp.int32)
-            self.queue.popleft()
+            if qi == 0:
+                self.queue.popleft()
+            else:
+                del self.queue[qi]
             padded = np.zeros(blen, np.int32)
-            padded[:n] = req.prompt
+            padded[:n] = ctx
             extra = {} if req.frames is None else \
                 {"frames": jnp.asarray(req.frames[None])}
             tok, self._cache = self._prefill(
@@ -328,11 +513,12 @@ class ServeEngine:
             req.out.append(tok)
             self._pos[s] = n
             self._last[s] = tok
-            # honor max_new / EOS on the PREFILL-sampled token: a request
-            # that is already complete never occupies a slot (or pages), so
-            # output length is exactly min(max_new, tokens-until-EOS)
+            # honor max_new / EOS / capacity on the PREFILL-sampled token:
+            # a request that is already complete never occupies a slot (or
+            # pages), so output length is exactly min(max_new,
+            # tokens-until-EOS)
             hit_eos = self.eos_id is not None and tok == self.eos_id
-            if req.max_new <= 1 or hit_eos:
+            if len(req.out) >= req.max_new or hit_eos or n >= self.max_len:
                 req.done = True
                 self.finished[req.rid] = req
                 if self.paged:
@@ -341,11 +527,14 @@ class ServeEngine:
                 self.active[s] = req
 
     def _release_pages(self, s: int):
-        """Return slot ``s``'s pages to the free-list and point its table
-        row at the null page so any frozen-cursor write lands in scratch."""
+        """Drop slot ``s``'s page references (shared prefix pages stay
+        live for their other holders / the prefix cache) and point its
+        table row at the null page so any frozen-cursor write lands in
+        scratch."""
         self._alloc.free(s)
         self._ptab[s] = 0
         self._ptab_dirty = True
+        self._note_pool()
 
     def _retire(self, s: int):
         req = self.active[s]
@@ -355,11 +544,105 @@ class ServeEngine:
         if self.paged:
             self._release_pages(s)
 
+    # -------------------------------------------- lazy growth + CoW + preempt
+    def _preempt(self, s: int):
+        """Evict slot ``s`` mid-decode: release its pages (prefix pages
+        merely drop a reference and usually stay cached) and requeue the
+        request, partial output intact, for re-prefill."""
+        req = self.active[s]
+        self.active[s] = None
+        self._release_pages(s)
+        self._sched.requeue(self.queue, req)
+        self.stats["preemptions"] += 1
+
+    def _reclaim_one(self, needy: int) -> bool:
+        """Free pool capacity for slot ``needy``: evict one cold prefix
+        block if possible, else preempt the scheduler's victim. Returns
+        False when ``needy`` itself was preempted or nothing is left to
+        reclaim (the caller must skip the slot this step)."""
+        if self._prefix is not None and self._prefix.evict_one():
+            self.stats["prefix_evictions"] += 1
+            return True
+        victims = [(t, len(self.active[t].out))
+                   for t in range(self.slots) if self.active[t] is not None]
+        if not victims:
+            return False
+        v = self._sched.pick_victim(victims)
+        self._preempt(v)
+        return v != needy
+
+    def _extend_reclaiming(self, s: int, n_tokens: int):
+        """allocator.extend with the reclaim ladder. Returns the fresh
+        pages, or None when slot ``s`` was preempted to satisfy itself."""
+        while True:
+            fresh = self._alloc.extend(s, n_tokens)
+            if fresh is not None:
+                self._note_pool()
+                return fresh
+            if not self._reclaim_one(s):
+                return None
+
+    def _cow_reclaiming(self, s: int, blk: int) -> bool:
+        """Copy-on-write slot ``s``'s page at ``blk`` (allocator swap +
+        device page copy), reclaiming if no page is free. Returns False
+        when slot ``s`` was preempted instead."""
+        while True:
+            old = self._alloc.pages_of(s)[blk]
+            new = self._alloc.cow(s, blk)
+            if new is not None:
+                if new != old:
+                    self._cache["kv"] = self._copy_page(
+                        self._cache["kv"], jnp.asarray(old, jnp.int32),
+                        jnp.asarray(new, jnp.int32))
+                    self._ptab[s, blk] = new
+                    self._ptab_dirty = True
+                    self.stats["cow_copies"] += 1
+                    self._note_pool()
+                return True
+            if not self._reclaim_one(s):
+                return False
+
+    def _grow_and_cow(self):
+        """Before the batched decode writes at each slot's cursor: grow
+        lazy reservations across page boundaries and copy-on-write any
+        write-target page that is still shared. Either can preempt slots
+        (including the needy one) when the pool runs dry."""
+        ps = self.page_size
+        for s in range(self.slots):
+            if self.active[s] is None:
+                continue
+            pos = int(self._pos[s])
+            if self.lazy and \
+                    pages_for(pos + 1, ps) > len(self._alloc.pages_of(s)):
+                fresh = self._extend_reclaiming(s, pos + 1)
+                if fresh is None:
+                    continue                  # s was preempted
+                w = len(self._alloc.pages_of(s))
+                self._ptab[s, w - len(fresh):w] = fresh
+                self._ptab_dirty = True
+            own = self._alloc.pages_of(s)
+            blk = pos // ps
+            if blk < len(own) and self._alloc.refcount(own[blk]) > 1:
+                self._cow_reclaiming(s, blk)
+
+    def release_prefix_cache(self) -> int:
+        """Flush every prefix block no live request still shares, freeing
+        their pages. Returns the number of blocks evicted."""
+        if self._prefix is None:
+            return 0
+        n = self._prefix.flush()
+        self.stats["prefix_evictions"] += n
+        self._note_pool()
+        return n
+
     # -------------------------------------------------------------- serve
     def step(self):
-        """Admit from the queue, then advance EVERY active slot with one
-        batched device call (no call at all if the table is empty)."""
+        """Admit from the queue, grow/CoW paged reservations, then advance
+        EVERY active slot with one batched device call (no call at all if
+        the table is empty)."""
         self._admit()
+        if self.paged and (self.lazy or self._prefix is not None):
+            self._grow_and_cow()
         mask = np.array([r is not None for r in self.active])
         if not mask.any():
             return

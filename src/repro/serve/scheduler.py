@@ -1,0 +1,62 @@
+"""Admission/preemption policy for the serve engine.
+
+With LAZY page growth the engine reserves only the pages covering a
+request's prompt plus its first decode write at admission and grows the
+reservation on page-boundary crossings; the pool can therefore run dry MID-DECODE, which the worst-case
+up-front reservation made impossible. Recovering is a policy decision,
+factored out of the engine mechanics:
+
+  * admission stays FIFO head-of-line (``next_index``): when the head
+    cannot get pages the engine waits for retirements/evictions rather
+    than admitting around it, so no request starves behind lucky late
+    arrivals;
+  * when ``extend``/``cow`` fails mid-decode, the engine first evicts
+    unreferenced prefix-cache pages, then asks ``pick_victim`` for an
+    active slot to PREEMPT: least-progress-first (fewest generated
+    tokens — the cheapest re-prefill, and the newest admissions yield to
+    requests that are nearly done), slot index as the deterministic
+    tie-break;
+  * a victim's pages are released (shared prefix pages merely drop one
+    reference and usually stay resident in the prefix cache), and the
+    request is requeued at the FRONT of the FIFO (``requeue``) with its
+    partial output intact: re-prefill over prompt+output resumes decoding
+    exactly where it stopped (greedy decode is bit-identical to the
+    uninterrupted run), and a prefix hit on the still-resident pages makes
+    that re-prefill cheap.
+
+Liveness: every reclaim round either evicts a cache page or preempts a
+slot, both finite; once every other slot is preempted and the cache is
+flushed, the survivor's worst-case context fits the pool by the submit()
+bound, so its extend succeeds — a pool sized below aggregate demand
+serializes the workload instead of deadlocking (tested in
+tests/test_serve_prefix.py::test_preemption_liveness_*).
+"""
+from __future__ import annotations
+
+from typing import Deque, List, Optional, Sequence, Tuple
+
+
+class FifoLeastProgress:
+    """FIFO admission + least-progress preemption (the default policy)."""
+
+    name = "fifo+least-progress"
+
+    def next_index(self, queue: Sequence) -> Optional[int]:
+        """Index into ``queue`` of the next admission candidate (FIFO:
+        always the head; None when empty). Head-of-line blocking is the
+        engine's contract: if this request cannot be placed, nothing is."""
+        return 0 if queue else None
+
+    def pick_victim(self, candidates: List[Tuple[int, int]]) -> int:
+        """Choose the slot to preempt from ``(slot, progress)`` pairs,
+        where progress counts generated tokens. Least progress first —
+        cheapest to re-prefill — with the slot index as a deterministic
+        tie-break."""
+        if not candidates:
+            raise ValueError("pick_victim needs at least one candidate")
+        return min(candidates, key=lambda sp: (sp[1], sp[0]))[0]
+
+    def requeue(self, queue: Deque, req) -> None:
+        """Return a preempted request to the queue: at the FRONT, so FIFO
+        order is preserved (it was admitted before anything now queued)."""
+        queue.appendleft(req)

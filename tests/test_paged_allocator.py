@@ -1,6 +1,6 @@
 """Property tests (hypothesis): the paged-KV free-list allocator under
 random admission/extend/free churn, checked op-by-op against a pure-Python
-reference model. Invariants:
+reference model. Invariants (exclusive-ownership churn, no sharing ops):
 
   * no page is ever owned by two live owners;
   * every page an owner held returns to the free-list on free();
@@ -8,7 +8,19 @@ reference model. Invariants:
   * alloc/extend fail (None) exactly when the free-list is too short —
     uniform pages cannot fragment.
 
-(The non-hypothesis seeded churn variant lives in test_serve_paged.py so
+A second suite churns the SHARING ops (adopt-on-alloc, raw ref/deref,
+copy-on-write) against a reference refcount model:
+
+  * refcount conservation — every live page's refcount equals the number
+    of owners listing it plus raw cache references, and pages_in_use
+    equals the count of UNIQUE live pages (free + unique == pool);
+  * no double-free — a page returns to the free-list exactly when its
+    last reference drops, never while an owner or the cache still holds
+    it;
+  * writer isolation after CoW — the writer ends with a refcount-1
+    private page, every other holder still lists the original.
+
+(The non-hypothesis seeded churn variants live in test_serve_paged.py so
 the invariants keep local coverage when hypothesis is absent.)
 """
 import pytest
@@ -74,7 +86,8 @@ def test_allocator_churn_matches_reference(ops, num_pages, page_size):
                     assert len(got) == pages_for(n, page_size)
         elif op == "extend":
             if owner not in ref.lens:
-                with pytest.raises(ValueError):
+                # regression: a lookup failure, never a fresh owner entry
+                with pytest.raises(KeyError):
                     alloc.extend(owner, n)
             else:
                 new_len = ref.lens[owner] + n
@@ -96,6 +109,130 @@ def test_allocator_churn_matches_reference(ops, num_pages, page_size):
                                                page_size)
                 assert alloc.free_pages == before + len(freed)
         check_invariants(alloc, ref)
+
+
+# ------------------------------------------------- sharing / refcount / CoW
+
+class ShareRefModel:
+    """Reference refcount bookkeeping, mirrored from allocator RETURNS:
+    owner -> block-ordered page list, plus raw cache references."""
+
+    def __init__(self, num_pages):
+        self.num_pages = num_pages
+        self.owners = {}
+        self.cache = {}                    # page -> raw ref count
+
+    def live(self):
+        pages = {p for ps in self.owners.values() for p in ps}
+        pages |= {p for p, c in self.cache.items() if c > 0}
+        return pages
+
+    def rc(self, page):
+        return (sum(ps.count(page) for ps in self.owners.values())
+                + self.cache.get(page, 0))
+
+    def free(self):
+        return self.num_pages - len(self.live())
+
+
+def check_share_invariants(alloc: PageAllocator, ref: ShareRefModel):
+    live = ref.live()
+    # unique-live conservation: free + unique live pages == pool
+    assert alloc.pages_in_use == len(live)
+    assert alloc.free_pages == ref.free()
+    # refcount conservation: owners' listings + raw refs, page by page
+    assert alloc.refcounts() == {p: ref.rc(p) for p in live}
+    for o, pages in ref.owners.items():
+        assert alloc.pages_of(o) == pages
+    assert set(alloc.owners()) == set(ref.owners)
+
+
+SHARE_OPS = hst.lists(
+    hst.tuples(hst.sampled_from(["alloc", "extend", "free", "ref",
+                                 "deref", "cow"]),
+               hst.integers(0, 3),          # owner id
+               hst.integers(0, 30),         # token count / growth
+               hst.integers(0, 3),          # donor owner (alloc sharing)
+               hst.integers(0, 6)),         # shared-prefix len / block idx
+    min_size=1, max_size=70)
+
+
+@settings(max_examples=60, deadline=None)
+@given(ops=SHARE_OPS, num_pages=hst.integers(1, 10),
+       page_size=hst.integers(1, 4))
+def test_refcounted_sharing_churn_matches_reference(ops, num_pages,
+                                                    page_size):
+    alloc = PageAllocator(num_pages, page_size, first_page=1)
+    ref = ShareRefModel(num_pages)
+    for op, owner, n, donor, k in ops:
+        if op == "alloc":
+            if owner in ref.owners:
+                with pytest.raises(ValueError):
+                    alloc.alloc(owner, n)
+                continue
+            want = pages_for(n, page_size)
+            shared = ref.owners.get(donor, [])[:min(k, want)]
+            got = alloc.alloc(owner, n, shared=shared)
+            ok = want - len(shared) <= ref.free()
+            assert (got is not None) == ok, (op, owner, n, shared)
+            if got is not None:
+                assert got[:len(shared)] == list(shared)   # adopted head
+                assert len(got) == want
+                ref.owners[owner] = list(got)
+        elif op == "extend":
+            if owner not in ref.owners:
+                with pytest.raises(KeyError):
+                    alloc.extend(owner, n)
+                continue
+            held = len(ref.owners[owner])
+            new_len = held * page_size + n     # never shrinks
+            extra = pages_for(new_len, page_size) - held
+            got = alloc.extend(owner, new_len)
+            assert (got is not None) == (extra <= ref.free())
+            if got is not None:
+                ref.owners[owner].extend(got)
+        elif op == "free":
+            if owner not in ref.owners:
+                with pytest.raises(ValueError):
+                    alloc.free(owner)
+            else:
+                freed = alloc.free(owner)
+                assert freed == ref.owners.pop(owner)
+        elif op == "ref":
+            pages = ref.owners.get(owner)
+            if not pages:
+                continue
+            p = pages[k % len(pages)]
+            alloc.ref(p)                       # cache pins a block
+            ref.cache[p] = ref.cache.get(p, 0) + 1
+        elif op == "deref":
+            pinned = sorted(p for p, c in ref.cache.items() if c > 0)
+            if not pinned:
+                continue
+            p = pinned[k % len(pinned)]
+            alloc.deref(p)                     # cache evicts a block
+            ref.cache[p] -= 1
+        else:  # cow
+            pages = ref.owners.get(owner)
+            if not pages:
+                continue
+            blk = k % len(pages)
+            old = pages[blk]
+            was_shared = ref.rc(old) > 1
+            got = alloc.cow(owner, blk)
+            if not was_shared:
+                assert got == old              # already private: no-op
+            elif ref.free() > 0:
+                # writer isolation: a fresh private page for the writer,
+                # the shared original keeps its other holders
+                assert got is not None and got != old
+                assert got not in ref.live()
+                pages[blk] = got
+                assert alloc.refcount(got) == 1
+                assert alloc.refcount(old) == ref.rc(old)
+            else:
+                assert got is None             # pool dry: caller reclaims
+        check_share_invariants(alloc, ref)
 
 
 @settings(max_examples=40, deadline=None)

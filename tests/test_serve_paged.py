@@ -222,6 +222,101 @@ def test_audio_frames_validation():
 
 # ------------------------------------------- allocator churn (no hypothesis)
 
+def test_allocator_extend_unknown_owner_raises_keyerror():
+    """Regression: extend() on an owner that holds no pages is a LOOKUP
+    failure — KeyError, never a silently minted owner entry."""
+    alloc = PageAllocator(4, 2, first_page=1)
+    with pytest.raises(KeyError):
+        alloc.extend("ghost", 4)
+    assert "ghost" not in alloc.owners()
+    assert alloc.free_pages == 4
+    alloc.alloc("ghost", 2)
+    assert alloc.extend("ghost", 4) is not None      # now it exists
+
+
+def test_allocator_refcount_sharing_seeded_churn():
+    """Seeded random churn over the SHARING ops (adopt-on-alloc, raw
+    ref/deref, copy-on-write) — the hypothesis-free twin of
+    test_paged_allocator.py's refcounted suite. Invariants: refcount
+    conservation (pages_in_use == unique pages across owners + cache,
+    each refcount == owner listings + raw refs), no double-free, and
+    writer isolation after CoW."""
+    rng = np.random.default_rng(7)
+    for trial in range(15):
+        num_pages = int(rng.integers(1, 12))
+        page_size = int(rng.integers(1, 5))
+        alloc = PageAllocator(num_pages, page_size, first_page=1)
+        owners = {}                     # owner -> expected page list
+        cache = {}                      # page -> raw ref count
+
+        def live():
+            pages = {p for ps in owners.values() for p in ps}
+            return pages | {p for p, c in cache.items() if c > 0}
+
+        def rc(page):
+            return (sum(ps.count(page) for ps in owners.values())
+                    + cache.get(page, 0))
+
+        for _ in range(120):
+            op = rng.choice(["alloc", "extend", "free", "ref", "deref",
+                             "cow"])
+            o = int(rng.integers(0, 4))
+            if op == "alloc" and o not in owners:
+                n = int(rng.integers(0, 25))
+                donor = owners.get(int(rng.integers(0, 4)), [])
+                want = pages_for(n, page_size)
+                shared = donor[:min(int(rng.integers(0, 5)), want)]
+                got = alloc.alloc(o, n, shared=shared)
+                fits = want - len(shared) <= num_pages - len(live())
+                assert (got is not None) == fits
+                if got is not None:
+                    assert got[:len(shared)] == shared
+                    owners[o] = list(got)
+            elif op == "extend" and o in owners:
+                new_len = (len(owners[o]) * page_size
+                           + int(rng.integers(0, 10)))
+                extra = pages_for(new_len, page_size) - len(owners[o])
+                got = alloc.extend(o, new_len)
+                assert (got is not None) == \
+                    (extra <= num_pages - len(live()))
+                if got is not None:
+                    owners[o].extend(got)
+            elif op == "free" and o in owners:
+                assert alloc.free(o) == owners.pop(o)
+            elif op == "ref" and owners.get(o):
+                p = owners[o][int(rng.integers(0, len(owners[o])))]
+                alloc.ref(p)
+                cache[p] = cache.get(p, 0) + 1
+            elif op == "deref":
+                pinned = sorted(p for p, c in cache.items() if c > 0)
+                if pinned:
+                    p = pinned[int(rng.integers(0, len(pinned)))]
+                    alloc.deref(p)
+                    cache[p] -= 1
+            elif op == "cow" and owners.get(o):
+                blk = int(rng.integers(0, len(owners[o])))
+                old = owners[o][blk]
+                was_shared = rc(old) > 1
+                got = alloc.cow(o, blk)
+                if not was_shared:
+                    assert got == old
+                elif num_pages - len(live()) > 0:
+                    assert got is not None and got not in live()
+                    owners[o][blk] = got
+                    # writer isolation: fresh private page; the original
+                    # keeps every other holder
+                    assert alloc.refcount(got) == 1
+                    assert alloc.refcount(old) == rc(old)
+                else:
+                    assert got is None
+            # invariants: unique-live conservation + per-page refcounts
+            assert alloc.pages_in_use == len(live())
+            assert alloc.free_pages == num_pages - len(live())
+            assert alloc.refcounts() == {p: rc(p) for p in live()}
+            for own, pages in owners.items():
+                assert alloc.pages_of(own) == pages
+
+
 def test_allocator_seeded_churn_invariants():
     """Seeded random alloc/extend/free churn (the hypothesis-free twin of
     test_paged_allocator.py): ownership is exclusive, frees are complete,

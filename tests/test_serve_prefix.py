@@ -1,0 +1,353 @@
+"""Shared-prefix KV cache + admission scheduler: prefix-shared, lazily
+grown and preempted/requeued requests stay TOKEN-IDENTICAL to sequential
+greedy decode (dense / MoE / enc-dec) with exactly one decode trace; N
+shared-prefix requests fit a pool sized for a fraction of them unshared;
+a pool sized below aggregate demand drains via preempt/requeue instead of
+deadlocking. The allocator-level refcount/CoW property suite is
+tests/test_paged_allocator.py (hypothesis) and its seeded twin in
+tests/test_serve_paged.py."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.api import Session
+from repro.configs.base import ModelConfig
+from repro.core.strategy import Strategy
+from repro.models import get_model
+from repro.serve.engine import ServeEngine
+from repro.serve.paging import pages_for
+from repro.serve.scheduler import FifoLeastProgress
+from repro.serve.step import greedy_generate
+
+CFG = ModelConfig(name="prefix-dense", arch_type="dense", num_layers=2,
+                  d_model=128, num_heads=4, num_kv_heads=2, d_ff=256,
+                  vocab_size=128, dtype="float32")
+
+MOE_CFG = ModelConfig(name="prefix-moe", arch_type="moe", num_layers=2,
+                      d_model=64, num_heads=4, num_kv_heads=2, d_ff=128,
+                      num_experts=4, experts_per_token=2, vocab_size=128,
+                      dtype="float32")
+
+AUDIO_CFG = ModelConfig(name="prefix-encdec", arch_type="audio",
+                        num_layers=2, d_model=64, num_heads=4,
+                        num_kv_heads=4, d_ff=128, vocab_size=128,
+                        encoder_layers=1, encoder_ctx=12, dtype="float32")
+
+
+def _params(cfg, seed=0):
+    return get_model(cfg).init(jax.random.key(seed), cfg)
+
+
+def _sequential(params, cfg, prompts, new, frames=None):
+    out = {}
+    for i, p in enumerate(prompts):
+        batch = {"tokens": jnp.asarray(p)[None]}
+        if frames is not None:
+            batch["frames"] = jnp.asarray(frames[i])[None]
+        toks = greedy_generate(params, cfg, Strategy(), batch, steps=new)
+        out[i] = [int(t) for t in toks[0]]
+    return out
+
+
+# ------------------------------------------------------------------ parity
+
+def test_prefix_shared_matches_sequential_dense():
+    """8 requests opening with the same 64-token system prompt, staggered
+    through 3 slots: prefix-shared + lazy outputs are byte-identical to
+    per-request greedy decode, with ONE decode trace and real block
+    reuse."""
+    params = _params(CFG)
+    rng = np.random.default_rng(0)
+    system = rng.integers(0, CFG.vocab_size, size=(64,)).astype(np.int32)
+    prompts = [np.concatenate(
+        [system, rng.integers(0, CFG.vocab_size,
+                              size=(int(n),)).astype(np.int32)])
+        for n in (4, 5, 6, 7, 4, 5, 6, 7)]
+    expected = _sequential(params, CFG, prompts, 6)
+    eng = ServeEngine(CFG, params, slots=3, max_len=128, paged=True,
+                      page_size=16, prefix_cache=True, lazy=True)
+    for i, p in enumerate(prompts):
+        eng.submit(i, p, max_new=6)
+    results = eng.run()
+    for i in expected:
+        assert results[i].done
+        assert results[i].out == expected[i], (i, results[i].out)
+    assert eng.stats["decode_traces"] == 1
+    # 7 followers x 4 shared system-prompt blocks were served from cache
+    assert eng.stats["prefix_hit_blocks"] >= 7 * 4
+
+
+def test_prefix_shared_matches_sequential_moe_identical_prompts():
+    """MoE keys the prefix cache on the FULL context (capacity routing
+    makes block KV portable only between identical sequences), so
+    repeated prompts dedup to one physical copy — and single-slot decode
+    stays token-identical to sequential."""
+    params = _params(MOE_CFG, seed=5)
+    rng = np.random.default_rng(6)
+    p = rng.integers(0, MOE_CFG.vocab_size, size=(11,)).astype(np.int32)
+    q = rng.integers(0, MOE_CFG.vocab_size, size=(9,)).astype(np.int32)
+    prompts = [p, p, q, p]
+    expected = _sequential(params, MOE_CFG, prompts, 4)
+    eng = ServeEngine(MOE_CFG, params, slots=1, max_len=32, paged=True,
+                      page_size=4, prefix_cache=True, lazy=True)
+    for i, pr in enumerate(prompts):
+        eng.submit(i, pr, max_new=4)
+    results = eng.run()
+    for i in expected:
+        assert results[i].out == expected[i], (i, results[i].out)
+    # repeats of p share its two full 4-token blocks; q matches nothing
+    assert eng.stats["prefix_hit_blocks"] >= 4
+    assert eng.stats["decode_traces"] == 1
+
+
+def test_prefix_shared_matches_sequential_encdec_frames_salt():
+    """Enc-dec decoder KV depends on the encoder output too, so the cache
+    keys on a digest of the frames: same audio + same prompt prefix
+    shares, same prompt under DIFFERENT audio must not (and stays
+    exact)."""
+    params = _params(AUDIO_CFG, seed=2)
+    rng = np.random.default_rng(2)
+    system = rng.integers(0, AUDIO_CFG.vocab_size,
+                          size=(8,)).astype(np.int32)
+    prompts = [np.concatenate(
+        [system, rng.integers(0, AUDIO_CFG.vocab_size,
+                              size=(n,)).astype(np.int32)])
+        for n in (3, 4)] + [None]
+    prompts[2] = prompts[0].copy()          # same tokens, other audio
+    f1 = rng.standard_normal(
+        (AUDIO_CFG.encoder_ctx, AUDIO_CFG.d_model)).astype(np.float32)
+    f2 = rng.standard_normal(
+        (AUDIO_CFG.encoder_ctx, AUDIO_CFG.d_model)).astype(np.float32)
+    frames = [f1, f1, f2]
+    expected = _sequential(params, AUDIO_CFG, prompts, 5, frames=frames)
+    eng = ServeEngine(AUDIO_CFG, params, slots=2, max_len=32, paged=True,
+                      page_size=4, prefix_cache=True, lazy=True)
+    for i, (pr, fr) in enumerate(zip(prompts, frames)):
+        eng.submit(i, pr, max_new=5, frames=fr)
+    results = eng.run()
+    for i in expected:
+        assert results[i].out == expected[i], (i, results[i].out)
+    # request 1 shares request 0's two system blocks (same f1 salt);
+    # request 2 shares nothing despite identical tokens (f2 salt)
+    assert eng.stats["prefix_hit_blocks"] == 2
+    assert eng.stats["decode_traces"] == 1
+
+
+def test_cow_tail_share_and_writer_isolation():
+    """A prompt that stops MID-BLOCK of a cached longer prompt adopts the
+    donor's page for its tail (partial hit) and must copy-on-write before
+    its first decode write — the donor's page stays intact for later
+    hits."""
+    params = _params(CFG, seed=1)
+    rng = np.random.default_rng(1)
+    base = rng.integers(0, CFG.vocab_size, size=(16,)).astype(np.int32)
+    expected = _sequential(params, CFG, [base, base[:10]], 6)
+    eng = ServeEngine(CFG, params, slots=2, max_len=64, paged=True,
+                      page_size=8, prefix_cache=True, lazy=True)
+    eng.submit(0, base, max_new=6)
+    r0 = eng.run()                      # donor retires; blocks stay cached
+    eng.submit(1, base[:10], max_new=6)
+    r1 = eng.run()                      # tail lands inside donor's block 1
+    assert r0[0].out == expected[0]
+    assert r1[1].out == expected[1]
+    assert eng.stats["prefix_tail_hits"] == 1
+    assert eng.stats["cow_copies"] == 1
+    # writer isolation, device-side: the donor's pages were NOT clobbered
+    eng.submit(2, base, max_new=6)
+    r2 = eng.run()
+    assert r2[2].out == expected[0]
+    assert eng.stats["decode_traces"] == 1
+
+
+def test_lazy_only_matches_sequential():
+    """Lazy growth without sharing: reservations grow across page
+    boundaries mid-decode and outputs stay exact (generous pool — no
+    preemption needed)."""
+    params = _params(CFG)
+    rng = np.random.default_rng(3)
+    prompts = [rng.integers(0, CFG.vocab_size,
+                            size=(int(n),)).astype(np.int32)
+               for n in (5, 9, 7, 13)]
+    expected = _sequential(params, CFG, prompts, 8)
+    eng = ServeEngine(CFG, params, slots=2, max_len=64, paged=True,
+                      page_size=4, lazy=True)
+    for i, p in enumerate(prompts):
+        eng.submit(i, p, max_new=8)
+    results = eng.run()
+    for i in expected:
+        assert results[i].out == expected[i]
+    assert eng.stats["preemptions"] == 0
+    assert eng.stats["decode_traces"] == 1
+    # lazy admission reserved prompt+1, nowhere near the worst case
+    assert eng.stats["peak_pages"] < eng.kv_pages
+
+
+# ------------------------------------------------------- memory regression
+
+def test_8_shared_prefix_requests_fit_2_unshared_budget():
+    """The acceptance bar: 8 requests sharing a 64-token system prompt
+    are ALL resident on a pool sized for 2 unshared requests (the shared
+    prefix is held once), token-identical to sequential decode — while
+    the same engine without sharing can only hold 2."""
+    params = _params(CFG, seed=1)
+    rng = np.random.default_rng(4)
+    ps = 8
+    system = rng.integers(0, CFG.vocab_size, size=(64,)).astype(np.int32)
+    prompts = [np.concatenate(
+        [system, rng.integers(0, CFG.vocab_size,
+                              size=(4,)).astype(np.int32)])
+        for _ in range(8)]
+    # worst-case context: 68 prompt + 4 new - 1 = 71 tokens -> 9 pages;
+    # the pool holds exactly two unshared requests' worth
+    pool = 2 * pages_for(min(68 + 4 - 1, 128), ps)
+    assert pool == 18
+    expected = _sequential(params, CFG, prompts, 4)
+
+    unshared = ServeEngine(CFG, params, slots=8, max_len=128, paged=True,
+                           page_size=ps, kv_pages=pool, lazy=True)
+    shared = ServeEngine(CFG, params, slots=8, max_len=128, paged=True,
+                         page_size=ps, kv_pages=pool, prefix_cache=True,
+                         lazy=True)
+    for i, p in enumerate(prompts):
+        unshared.submit(i, p, max_new=4)
+        shared.submit(i, p, max_new=4)
+    unshared.step()
+    shared.step()
+    assert sum(r is not None for r in unshared.active) == 2
+    assert sum(r is not None for r in shared.active) == 8
+    ru, rs = unshared.run(), shared.run()
+    for i in expected:
+        assert rs[i].done and rs[i].out == expected[i]
+        assert ru[i].done and ru[i].out == expected[i]
+    # 8 system-prompt pages held ONCE + 8 private tail pages
+    assert shared.stats["peak_pages"] <= 8 + 8
+    assert shared.stats["prefix_hit_blocks"] >= 7 * 8
+    assert shared.stats["decode_traces"] == 1
+    # drained: live requests gone, only cached prefix blocks remain
+    assert shared._alloc.pages_in_use == len(shared._prefix) > 0
+    shared.release_prefix_cache()
+    assert shared._alloc.pages_in_use == 0
+    assert shared._alloc.free_pages == shared.kv_pages
+
+
+# ----------------------------------------------------- preemption liveness
+
+@pytest.mark.parametrize("kv_pages,prefix", [(8, False), (8, True),
+                                             (4, False)])
+def test_preemption_liveness_pool_below_demand(kv_pages, prefix):
+    """A pool deliberately sized below aggregate demand drains EVERY
+    request via evict/preempt/requeue — no deadlock, no dropped request,
+    outputs still byte-identical to sequential decode, one trace."""
+    params = _params(CFG, seed=1)
+    rng = np.random.default_rng(5)
+    prompts = [rng.integers(0, CFG.vocab_size,
+                            size=(6,)).astype(np.int32) for _ in range(5)]
+    expected = _sequential(params, CFG, prompts, 10)
+    eng = ServeEngine(CFG, params, slots=4, max_len=64, paged=True,
+                      page_size=4, kv_pages=kv_pages, lazy=True,
+                      prefix_cache=prefix)
+    for i, p in enumerate(prompts):
+        eng.submit(i, p, max_new=10)   # demand: 5 * 4 pages > kv_pages
+    results = eng.run()
+    assert all(results[i].done for i in range(5))
+    for i in expected:
+        assert results[i].out == expected[i], (i, results[i].out)
+    assert eng.stats["preemptions"] >= 1
+    assert eng.stats["decode_traces"] == 1
+    if prefix:
+        eng.release_prefix_cache()
+    assert eng._alloc.pages_in_use == 0
+
+
+def test_lazy_reserve_clamped_to_worst_case():
+    """Regression: lazy admission must never demand MORE pages than the
+    worst case submit() validated — a max_new=1 request with a
+    page-aligned prompt needs NO decode page (it finishes on the prefill
+    token), so it must drain on a pool of exactly pages_for(prompt)."""
+    params = _params(CFG, seed=1)
+    prompt = np.arange(16, dtype=np.int32)        # exactly one 16-tok page
+    expected = _sequential(params, CFG, [prompt], 1)
+    eng = ServeEngine(CFG, params, slots=1, max_len=32, paged=True,
+                      page_size=16, kv_pages=1, lazy=True)
+    eng.submit(0, prompt, max_new=1)              # worst case: 1 page == pool
+    results = eng.run(max_steps=50)
+    assert results[0].done
+    assert results[0].out == expected[0]
+    assert eng._alloc.pages_in_use == 0
+
+
+def test_preempted_partials_survive_max_steps():
+    """Preempted-and-requeued requests surface as done=False partials on
+    max_steps exhaustion (nothing vanishes), and a later run() finishes
+    them."""
+    params = _params(CFG, seed=1)
+    rng = np.random.default_rng(6)
+    eng = ServeEngine(CFG, params, slots=2, max_len=64, paged=True,
+                      page_size=4, kv_pages=4, lazy=True)
+    for i in range(3):
+        eng.submit(i, rng.integers(0, CFG.vocab_size, size=(5,)),
+                   max_new=12)
+    results = eng.run(max_steps=4)
+    assert set(results) == {0, 1, 2}
+    assert any(not r.done for r in results.values())
+    assert all(r.done for r in eng.run().values())
+
+
+# ----------------------------------------------------- policy + validation
+
+def test_scheduler_policy_object():
+    sched = FifoLeastProgress()
+    assert sched.next_index([]) is None
+    assert sched.next_index(["a", "b"]) == 0
+    # least progress wins; slot index breaks ties deterministically
+    assert sched.pick_victim([(0, 5), (1, 2), (2, 2)]) == 1
+    assert sched.pick_victim([(3, 0)]) == 3
+    with pytest.raises(ValueError):
+        sched.pick_victim([])
+    from collections import deque
+    q = deque(["x"])
+    sched.requeue(q, "victim")
+    assert list(q) == ["victim", "x"]
+
+
+def test_prefix_and_lazy_flag_validation():
+    params = _params(CFG, seed=1)
+    # prefix_cache/lazy resolve paged=None to the paged layout
+    eng = ServeEngine(CFG, params, slots=1, max_len=32, prefix_cache=True)
+    assert eng.paged and eng.prefix_cache
+    with pytest.raises(ValueError, match="paged"):
+        ServeEngine(CFG, params, slots=1, max_len=32, paged=False,
+                    prefix_cache=True)
+    with pytest.raises(ValueError, match="paged"):
+        ServeEngine(CFG, params, slots=1, max_len=32, paged=False,
+                    lazy=True)
+    ssm_cfg = ModelConfig(name="prefix-ssm", arch_type="ssm", num_layers=2,
+                          d_model=64, num_heads=0, num_kv_heads=0, d_ff=128,
+                          ssm_state=16, ssm_heads=4, ssm_head_dim=16,
+                          vocab_size=128, dtype="float32")
+    with pytest.raises(ValueError, match="paged KV"):
+        ServeEngine(ssm_cfg, _params(ssm_cfg, seed=4), slots=1, max_len=32,
+                    prefix_cache=True)
+
+
+def test_session_serve_wires_prefix_and_lazy():
+    """The Session facade passes prefix_cache/lazy through to the engine
+    and the served tokens match the session's own sequential generate."""
+    session = Session(CFG.with_(name="prefix-session"))
+    eng = session.serve(slots=2, max_len=64, page_size=8,
+                        prefix_cache=True, lazy=True)
+    assert eng.paged and eng.prefix_cache and eng.lazy
+    rng = np.random.default_rng(7)
+    system = rng.integers(0, CFG.vocab_size, size=(16,)).astype(np.int32)
+    prompts = [np.concatenate(
+        [system, rng.integers(0, CFG.vocab_size,
+                              size=(n,)).astype(np.int32)])
+        for n in (3, 5)]
+    for i, p in enumerate(prompts):
+        eng.submit(i, p, max_new=4)
+    results = eng.run()
+    for i, p in enumerate(prompts):
+        ref = np.asarray(session.generate(p, steps=4))[0]
+        assert results[i].out == [int(t) for t in ref]
+    assert eng.stats["prefix_hit_blocks"] >= 2
