@@ -12,12 +12,30 @@ whether or not requests are short); the paged layout (--paged) holds one
 shared page pool, sizable via --kv-pages independently of the slot count,
 which is the fragmentation win the paged tests pin down.
 
-CLI (JSON output, used by the CI smoke step):
+``--tp`` / ``--dp`` serve the same workload through the sharded paths
+(serve/parallel.py): tp shards the one-trace decode program + KV pool
+over that many devices, dp replicates engines behind the least-load
+router; ``--parallel-sweep`` crosses tp in {1,2,4} x dp in {1,2} and
+reports tokens/s plus per-device peak KV bytes per cell (the acceptance
+signal: per-device KV ~ 1/tp of the unsharded pool, one decode trace per
+replica throughout). Any of the three forces 8 virtual host devices
+before jax initializes; override via XLA_FLAGS.
+
+CLI (JSON output, used by the CI smoke steps):
 
     PYTHONPATH=src:. python benchmarks/bench_serve_throughput.py \
         --slots 1 2 4 --requests 8 --max-new 8 --json out.json
 """
 from __future__ import annotations
+
+import os
+import sys
+
+if any(a.startswith(("--tp", "--dp", "--parallel-sweep"))
+       for a in sys.argv):
+    # must land before jax (imported below via repro.models) initializes
+    os.environ.setdefault("XLA_FLAGS",
+                          "--xla_force_host_platform_device_count=8")
 
 import argparse
 import json
@@ -28,9 +46,10 @@ import numpy as np
 from repro.configs.base import ModelConfig
 from repro.models import get_model
 from repro.serve.engine import ServeEngine
+from repro.serve.parallel import ReplicaRouter, replica_meshes
 
 TINY = ModelConfig(name="bench-serve", arch_type="dense", num_layers=2,
-                   d_model=128, num_heads=4, num_kv_heads=2, d_ff=256,
+                   d_model=128, num_heads=4, num_kv_heads=4, d_ff=256,
                    vocab_size=256, dtype="float32")
 
 
@@ -43,10 +62,17 @@ def _workload(rng, n_requests):
 def bench(params, *, slots: int, n_requests: int, max_new: int,
           max_len: int = 64, seed: int = 0, paged: bool = False,
           page_size: int = 16, kv_pages=None, prefix_cache: bool = False,
-          lazy: bool = False) -> dict:
-    eng = ServeEngine(TINY, params, slots=slots, max_len=max_len,
-                      paged=paged, page_size=page_size, kv_pages=kv_pages,
-                      prefix_cache=prefix_cache, lazy=lazy)
+          lazy: bool = False, tp: int = 1, dp: int = 1) -> dict:
+    kw = dict(slots=slots, max_len=max_len, paged=paged,
+              page_size=page_size, kv_pages=kv_pages,
+              prefix_cache=prefix_cache, lazy=lazy)
+    if dp > 1:
+        eng = ReplicaRouter(TINY, params, dp=dp, tp=tp, **kw)
+    elif tp > 1:
+        [mesh] = replica_meshes(1, tp)
+        eng = ServeEngine(TINY, params, mesh=mesh, **kw)
+    else:
+        eng = ServeEngine(TINY, params, **kw)
     rng = np.random.default_rng(seed)
     prompts = _workload(rng, n_requests)
 
@@ -62,24 +88,31 @@ def bench(params, *, slots: int, n_requests: int, max_new: int,
     serve(0)                                   # warm: traces decode+buckets
     steps0 = eng.stats["decode_steps"]
     toks, dt = serve(n_requests)               # measured pass, fully traced
+    st = eng.stats
+    # trace counters are a PER-REPLICA property: report the worst replica
+    # so "decode_traces == 1" means one trace in EVERY engine
+    reps = st.get("replicas", [st])
     return {
         "slots": slots,
+        "tp": tp,
+        "dp": dp,
         "requests": n_requests,
         "tokens": toks,
         "wall_s": round(dt, 4),
         "tokens_per_s": round(toks / dt, 1),
-        "decode_steps": eng.stats["decode_steps"] - steps0,
-        "decode_traces": eng.stats["decode_traces"],
-        "prefill_traces": eng.stats["prefill_traces"],
-        "paged": eng.paged,
+        "decode_steps": st["decode_steps"] - steps0,
+        "decode_traces": max(r["decode_traces"] for r in reps),
+        "prefill_traces": max(r["prefill_traces"] for r in reps),
+        "paged": (eng.engines[0] if dp > 1 else eng).paged,
         "peak_kv_bytes": eng.kv_bytes(),
+        "per_device_peak_kv_bytes": eng.per_device_kv_bytes(),
         # pool telemetry (zeros on the dense layout / with sharing off)
-        "pages_in_use": eng.stats["pages_in_use"],
-        "peak_pages": eng.stats["peak_pages"],
-        "prefix_hit_blocks": eng.stats["prefix_hit_blocks"],
-        "prefix_miss_blocks": eng.stats["prefix_miss_blocks"],
-        "preemptions": eng.stats["preemptions"],
-        "cow_copies": eng.stats["cow_copies"],
+        "pages_in_use": st["pages_in_use"],
+        "peak_pages": st["peak_pages"],
+        "prefix_hit_blocks": st["prefix_hit_blocks"],
+        "prefix_miss_blocks": st["prefix_miss_blocks"],
+        "preemptions": st["preemptions"],
+        "cow_copies": st["cow_copies"],
     }
 
 
@@ -115,17 +148,35 @@ def main():
     ap.add_argument("--page-size", type=int, default=16)
     ap.add_argument("--kv-pages", type=int, default=None,
                     help="paged pool size (default: dense-capacity parity)")
+    ap.add_argument("--tp", type=int, default=1,
+                    help="tensor-parallel degree (shard the decode "
+                         "program + KV pool; forces 8 host devices)")
+    ap.add_argument("--dp", type=int, default=1,
+                    help="data-parallel replica count (least-load router)")
+    ap.add_argument("--parallel-sweep", action="store_true",
+                    help="sweep tp in {1,2,4} x dp in {1,2} on the paged "
+                         "layout at the first --slots value")
     ap.add_argument("--json", type=str, default="",
                     help="write results to this path (default: stdout)")
     args = ap.parse_args()
 
     import jax
     params = get_model(TINY).init(jax.random.key(0), TINY)
-    results = [bench(params, slots=s, n_requests=args.requests,
-                     max_new=args.max_new, max_len=args.max_len,
-                     paged=args.paged, page_size=args.page_size,
-                     kv_pages=args.kv_pages)
-               for s in args.slots]
+    if args.parallel_sweep:
+        results = [bench(params, slots=args.slots[0],
+                         n_requests=args.requests, max_new=args.max_new,
+                         max_len=args.max_len, paged=True,
+                         page_size=args.page_size, kv_pages=args.kv_pages,
+                         tp=tp, dp=dp)
+                   for tp in (1, 2, 4) for dp in (1, 2)
+                   if tp * dp <= jax.device_count()]
+    else:
+        results = [bench(params, slots=s, n_requests=args.requests,
+                         max_new=args.max_new, max_len=args.max_len,
+                         paged=args.paged or args.tp > 1 or args.dp > 1,
+                         page_size=args.page_size, kv_pages=args.kv_pages,
+                         tp=args.tp, dp=args.dp)
+                   for s in args.slots]
     report = {"config": TINY.name, "results": results}
     out = json.dumps(report, indent=2)
     if args.json:
@@ -133,11 +184,13 @@ def main():
             f.write(out + "\n")
         base = results[0]["tokens_per_s"]
         for r in results:
-            print(f"slots={r['slots']:>2} {r['tokens_per_s']:>8.1f} tok/s "
+            print(f"slots={r['slots']:>2} tp{r['tp']} dp{r['dp']} "
+                  f"{r['tokens_per_s']:>8.1f} tok/s "
                   f"({r['tokens_per_s'] / base:.2f}x, "
                   f"{r['decode_steps']} decode calls, "
-                  f"{r['decode_traces']} trace, "
-                  f"kv {r['peak_kv_bytes'] / 1e6:.2f}MB)")
+                  f"{r['decode_traces']} trace/replica, "
+                  f"kv {r['peak_kv_bytes'] / 1e6:.2f}MB global / "
+                  f"{r['per_device_peak_kv_bytes'] / 1e6:.2f}MB per dev)")
     else:
         print(out)
 

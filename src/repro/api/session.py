@@ -51,6 +51,7 @@ class Session:
             Strategy(dtype=cfg.dtype)
         self.mesh = mesh if mesh is not None else make_host_mesh(model=1)
         self.seed = seed
+        self.plan: Optional[Plan] = None     # set by from_plan
         self._params = params
         self._trainer: Optional[Trainer] = None
 
@@ -61,10 +62,15 @@ class Session:
         """Materialize a planner Plan and build the Session on it — the
         search-to-execution hand-off (GSPMD/Alpa shape). Strategy-field
         overrides (``dtype="float32"``, ``remat=False``, ...) pass
-        through to :meth:`Plan.materialize`."""
+        through to :meth:`Plan.materialize`. The plan is kept on the
+        session, so a later :meth:`serve` defaults to ITS tp/dp degrees
+        — ``Session.from_plan(cfg, plan(...)).serve()`` serves sharded
+        on exactly the topology the planner chose."""
         strategy, mesh = plan.materialize(devices=devices,
                                           **strategy_overrides)
-        return cls(cfg, strategy, mesh, seed=seed)
+        session = cls(cfg, strategy, mesh, seed=seed)
+        session.plan = plan
+        return session
 
     # ------------------------------------------------------------- params
     @property
@@ -137,16 +143,33 @@ class Session:
                                steps=steps)
 
     # -------------------------------------------------------------- serve
-    def serve(self, *, slots: int = 4, max_len: int = 256,
+    def serve(self, *, plan: Optional[Plan] = None, tp: Optional[int] = None,
+              dp: Optional[int] = None, slots: int = 4, max_len: int = 256,
               eos_id: Optional[int] = None, temperature: float = 0.0,
               seed: Optional[int] = None, paged: Optional[bool] = None,
               page_size: int = 16, kv_pages: Optional[int] = None,
               prefix_cache: bool = False, lazy: bool = False,
-              scheduler=None) -> ServeEngine:
+              scheduler=None):
         """Continuous-batching engine over this session's params: one
         batched jitted decode advances the whole slot table per step.
         ``temperature > 0`` switches the on-device sampler from greedy to
         temperature sampling (seeded from the session seed by default).
+
+        Parallel serving (the survey's intra-operator + replication
+        split, serve/parallel.py): ``tp > 1`` runs ONE engine whose
+        prefill/decode programs are GSPMD-sharded over a ("data",
+        "model") mesh — Megatron param layout, head-sharded paged KV
+        pool, still exactly one decode trace; ``dp > 1`` returns a
+        :class:`~repro.serve.parallel.ReplicaRouter` of ``dp`` such
+        engines over disjoint device slices, routed least-load with
+        prefix-cache affinity. Defaults come from ``plan`` (an explicit
+        Plan argument, else the session's own plan when it was built by
+        :meth:`from_plan`), so ``Session.from_plan(cfg, plan(...))
+        .serve()`` just works; explicit ``tp=`` / ``dp=`` override the
+        plan, and a plain ``Session(cfg).serve()`` stays the familiar
+        single unsharded engine. Pipeline degrees don't apply to the
+        decode loop — a plan with ``pp > 1`` is rejected unless both
+        overrides are given.
 
         KV layout: ``paged=None`` (default) picks the paged block-table
         cache for full-attention decoders (dense / MoE / enc-dec) and
@@ -171,14 +194,40 @@ class Session:
         least-progress slot when the pool runs dry (greedy outputs stay
         bit-identical); ``scheduler`` overrides the admission/preemption
         policy (default: FIFO + least-progress-preempt,
-        serve/scheduler.py)."""
-        return ServeEngine(self.cfg, self.params, slots=slots,
-                           max_len=max_len, eos_id=eos_id,
-                           temperature=temperature,
-                           seed=self.seed if seed is None else seed,
-                           paged=paged, page_size=page_size,
-                           kv_pages=kv_pages, prefix_cache=prefix_cache,
-                           lazy=lazy, scheduler=scheduler)
+        serve/scheduler.py; ``serve.scheduler.Priority`` honors
+        ``submit(..., priority=)``)."""
+        p = plan if plan is not None else self.plan
+        if tp is None or dp is None:
+            if p is not None and p.degrees.pp > 1:
+                raise ValueError(
+                    f"plan[{p.method}] has pp={p.degrees.pp}: pipeline "
+                    "parallelism has no serving path (decode is one "
+                    "token deep) — re-plan with pp=1 or pass explicit "
+                    "tp=/dp= to serve()")
+            tp = (p.degrees.tp if p is not None else 1) if tp is None else tp
+            dp = (p.degrees.dp if p is not None else 1) if dp is None else dp
+        kw = dict(slots=slots, max_len=max_len, eos_id=eos_id,
+                  temperature=temperature,
+                  seed=self.seed if seed is None else seed,
+                  paged=paged, page_size=page_size, kv_pages=kv_pages,
+                  prefix_cache=prefix_cache, lazy=lazy, scheduler=scheduler)
+        if tp == 1 and dp == 1:
+            return ServeEngine(self.cfg, self.params, **kw)
+        # serve on the session's own device placement when its mesh IS the
+        # dp x tp layout (the from_plan case); else the first dp*tp devices
+        devices = None
+        if tuple(self.mesh.axis_names) == ("data", "model") and \
+                (self.mesh.shape["data"], self.mesh.shape["model"]) \
+                == (dp, tp):
+            devices = self.mesh.devices
+        if dp == 1:
+            from repro.serve.parallel import replica_meshes
+            [mesh] = replica_meshes(1, tp, devices)
+            return ServeEngine(self.cfg, self.params, mesh=mesh,
+                               strategy=self.strategy, **kw)
+        from repro.serve.parallel import ReplicaRouter
+        return ReplicaRouter(self.cfg, self.params, dp=dp, tp=tp,
+                             devices=devices, strategy=self.strategy, **kw)
 
     # ------------------------------------------------------------- dryrun
     def dryrun(self, shape: ShapeLike, *, verbose: bool = False,

@@ -195,7 +195,17 @@ def opt_state_pspecs(opt_state, params, strategy: Strategy, mesh: Mesh):
 def cache_pspecs(cache: Any, strategy: Strategy, mesh: Mesh, batch: int):
     """KV / SSM cache specs: batch over data (when divisible), heads over
     model. Cache layouts: kv k/v (L,B,W,Hkv,D); ssm state (L,B,H,P,N);
-    conv (L,B,W,C); xkv like kv."""
+    conv (L,B,W,C); xkv like kv.
+
+    A cache carrying a ``"ptab"`` page table (the serve engine's paged
+    layout) holds its decoder KV as one flat POOL
+    (L, n_pages, page_size, Hkv, D) shared by every slot instead of
+    per-slot rows: the pool is head-sharded over "model" (each device
+    keeps Hkv/tp heads of EVERY page — intra-operator TP for serving)
+    and never batch-sharded (pages have no batch dim; data-parallel
+    serving replicates whole engines, serve/parallel.py). The page table
+    itself and any dense leaves riding along (the enc-dec cross-KV
+    ``xkv``, SSM states) keep their usual specs."""
     rules = strategy.rules(mesh)
     dp = 1
     for a in ("pod", "data"):
@@ -204,11 +214,20 @@ def cache_pspecs(cache: Any, strategy: Strategy, mesh: Mesh, batch: int):
     bspec = rules["batch"] if batch % dp == 0 else None
 
     model_size = mesh.shape.get("model", 1)
+    paged = isinstance(cache, dict) and "ptab" in cache
 
     def one(path, leaf):
         names = _path_names(path)
         if leaf.ndim == 0 or names[-1] == "pos":
             return P()
+        if paged and names[0] == "kv" and names[-1] in ("k", "v"):
+            # the flat page pool: shard the kv-head axis over "model"
+            # (fall back to replicated when GQA heads don't divide — the
+            # page axis must stay whole, a gather index crosses it)
+            spec = P(None, None, None,
+                     rules["kv_heads"] if leaf.shape[3] % model_size == 0
+                     else None, None)
+            return _divisible(leaf.shape, spec, mesh)
         if names[-1] in ("k", "v"):
             # Prefer KV-head sharding (Megatron); when GQA kv_heads don't
             # divide the model axis, shard the cache SEQUENCE dim instead

@@ -13,8 +13,23 @@ visible hit rate), and ``--lazy`` grows reservations on page-boundary
 crossings with preempt/requeue under pressure. Audio (enc-dec) archs
 serve with synthetic frame embeddings standing in for the stubbed
 mel+conv frontend.
+
+Parallel serving (serve/parallel.py): ``--tp N`` shards the one-trace
+decode program over N devices (Megatron layout, head-sharded KV pool),
+``--dp M`` replicates the engine M times behind a least-load router —
+``--tp 2 --dp 2`` needs 4 devices. On a CPU host the launcher forces 8
+virtual devices up front (before jax initializes) so both flags work out
+of the box; set XLA_FLAGS yourself to override.
 """
 from __future__ import annotations
+
+import os
+import sys
+
+if any(a.startswith(("--tp", "--dp")) for a in sys.argv):
+    # must land before jax (imported below via repro.api) initializes
+    os.environ.setdefault("XLA_FLAGS",
+                          "--xla_force_host_platform_device_count=8")
 
 import argparse
 import time
@@ -53,6 +68,13 @@ def main():
     ap.add_argument("--shared-prefix", type=int, default=0, metavar="N",
                     help="prepend the same N-token system prompt to every "
                          "request (demonstrates --prefix-cache sharing)")
+    ap.add_argument("--tp", type=int, default=1,
+                    help="intra-operator (tensor) parallel degree: shard "
+                         "the decode program + KV pool over this many "
+                         "devices (serve/parallel.py)")
+    ap.add_argument("--dp", type=int, default=1,
+                    help="data-parallel replica count: run this many "
+                         "engine replicas behind a least-load router")
     args = ap.parse_args()
 
     cfg = get_smoke(args.arch).with_(dtype="float32")
@@ -61,7 +83,8 @@ def main():
                          "vision frontend wired into engine prefill "
                          "(see serve/step.py)")
     session = Session(cfg)
-    eng = session.serve(slots=args.slots, max_len=args.max_len,
+    eng = session.serve(tp=args.tp, dp=args.dp,
+                        slots=args.slots, max_len=args.max_len,
                         temperature=args.temperature,
                         paged=False if args.dense else None,
                         page_size=args.page_size, kv_pages=args.kv_pages,
@@ -81,15 +104,24 @@ def main():
     results = eng.run()
     dt = time.time() - t0
     total = sum(len(r.out) for r in results.values())
-    layout = f"paged/{eng.page_size}tok-pages" if eng.paged else "dense"
+    # a dp>1 serve() returns a ReplicaRouter; report its aggregate stats
+    # and describe the layout from the first (representative) replica
+    rep = eng.engines[0] if hasattr(eng, "engines") else eng
+    st = eng.stats
+    # trace counters are per-replica: report the worst engine so "1
+    # decode trace/replica" states the invariant, not a dp-fold sum
+    traces = max(r["decode_traces"] for r in st.get("replicas", [st]))
+    layout = f"paged/{rep.page_size}tok-pages" if rep.paged else "dense"
+    par = f", tp{rep.tp}" + (f" x dp{eng.dp}" if hasattr(eng, "dp") else "")
     print(f"served {len(results)} requests, {total} tokens "
-          f"in {dt:.2f}s ({total / dt:.1f} tok/s, {args.slots} slots, "
-          f"{layout} kv {eng.kv_bytes() / 1e6:.1f}MB, "
-          f"{eng.stats['decode_steps']} decode calls, "
-          f"{eng.stats['decode_traces']} decode trace)")
-    if eng.paged:
-        st = eng.stats
-        print(f"  pool: peak {st['peak_pages']}/{eng.kv_pages} pages, "
+          f"in {dt:.2f}s ({total / dt:.1f} tok/s, {args.slots} slots{par}, "
+          f"{layout} kv {eng.kv_bytes() / 1e6:.1f}MB global / "
+          f"{eng.per_device_kv_bytes() / 1e6:.1f}MB per device, "
+          f"{st['decode_steps']} decode calls, "
+          f"{traces} decode trace/replica)")
+    if rep.paged:
+        pool = rep.kv_pages * (eng.dp if hasattr(eng, "dp") else 1)
+        print(f"  pool: peak {st['peak_pages']}/{pool} pages, "
               f"prefix hit/miss {st['prefix_hit_blocks']}/"
               f"{st['prefix_miss_blocks']} blocks "
               f"(+{st['prefix_tail_hits']} tail), "

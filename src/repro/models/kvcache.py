@@ -58,6 +58,16 @@ appear in SEVERAL slots' table rows (a common prompt prefix held once),
 and only table values change, so decode still traces exactly once. The
 one device-side addition is ``copy_page`` — the copy-on-write step that
 duplicates a shared page's contents before a writer appends into it.
+
+Sharded (TP) pool layout: under a ("data", "model") mesh the pool keeps
+this exact shape but is partitioned on the KV-HEAD axis —
+``(L, n_pages, page_size, Hkv/tp, D)`` per device
+(core/sharding.cache_pspecs) — so every device holds its head slice of
+EVERY page and each resident page costs 1/tp per device. Page ids stay
+global (the page/table axes are never sharded: a table lookup must
+resolve on every device), which is why the whole serve bookkeeping —
+allocator, prefix cache, preemption — is sharding-blind: it only ever
+deals in page ids and table values.
 """
 from __future__ import annotations
 

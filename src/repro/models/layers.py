@@ -131,12 +131,19 @@ def paged_attention(q, k_pages, v_pages, page_table, pos):
     gather is a table lookup — table VALUES change between steps, shapes
     never do, so the batched decode program still traces exactly once.
 
-    Cost note: the gather materializes the FULL table width
-    (``P * page_size`` positions) per row per layer — the same transient
-    working set dense decode attention reads. Paging shrinks the
-    RESIDENT pool between steps; bounding the per-step gather to the max
-    live page count would need dynamic shapes (a retrace per occupancy
-    high-water mark) and is left to the roadmap's lazy-growth follow-up.
+    Cost note: the gather materializes ``P * page_size`` positions per
+    row per layer, where ``P`` is the WIDTH OF THE TABLE PASSED IN — the
+    serve engine hands this function a table clipped to the power-of-two
+    bucket of the allocator's per-slot page high-water mark
+    (serve/step.page_bucket), so decode cost tracks pool occupancy
+    rather than ``max_len`` and the program only retraces when the
+    high-water crosses a bucket boundary.
+
+    TP note: under a ("data", "model") mesh the pool is head-sharded
+    over "model" (core/sharding.cache_pspecs) — the gather indexes the
+    unsharded page axis, so each device gathers only its Hkv/tp heads
+    and the attention math below stays head-local until the row-sharded
+    output projection's all-reduce.
     """
     kv_len = jnp.asarray(pos) + 1
     k = gather_pages(k_pages, page_table)

@@ -86,6 +86,32 @@ prefill capacity, where the uninterrupted run would have routed the tail
 token-by-token — and with ``temperature > 0`` a preempted request resumes
 on a different rng draw (stochastic either way).
 
+Intra-operator (TP) sharded serving (``mesh=``)
+-----------------------------------------------
+Passing a ("data", "model") mesh (+ the Strategy whose rules map logical
+axes onto it) runs the SAME one-trace prefill/decode programs sharded
+GSPMD-style across the mesh's ``tp`` devices: params take the Megatron
+§5.1 layout (core/sharding.param_pspecs), and the paged pool keeps its
+flat ``(L, n_pages, page_size, Hkv, D)`` shape but is HEAD-SHARDED over
+"model" — each device holds ``Hkv/tp`` heads of every page, so resident
+per-device KV is ~1/tp of the unsharded pool while the page axis stays
+whole (the block-table gather indexes it). The page table, cursors and
+sampled logits are replicated; admission/retire still only rewrites
+table VALUES, so the one-decode-trace invariant survives sharding
+(tests/test_serve_parallel.py pins tp=2 token parity vs tp=1). Data
+parallelism is one level up: ``serve/parallel.ReplicaRouter``
+instantiates ``dp`` engine replicas over disjoint device slices and
+routes requests between them.
+
+Decode cost tracks OCCUPANCY, not capacity: the page table handed to the
+decode program is clipped to the power-of-two bucket of the live page
+high-water mark — the allocator's per-owner peak, with every admission's
+worst-case reservation pre-booked so lazy growth never re-buckets
+mid-decode (serve/step.page_bucket, ``_sync_ptab``). The paged-attention
+gather then reads ``bucket * page_size`` positions per row instead of
+the full ``max_len`` table width, and the program retraces only when an
+admission pushes the high-water across a bucket boundary.
+
 ``engine.stats`` counts device calls AND traces (``decode_traces`` /
 ``prefill_traces`` increment only while tracing), so tests can assert the
 one-program property directly — plus pool telemetry: ``pages_in_use`` /
@@ -95,25 +121,32 @@ one-program property directly — plus pool telemetry: ``pages_in_use`` /
 
 Preferred construction: ``repro.api.Session.serve(slots=..., max_len=...,
 page_size=..., prefix_cache=..., lazy=...)`` — the Session supplies the
-params so callers never thread param trees by hand.
+params so callers never thread param trees by hand, and its ``plan=`` /
+``tp=`` / ``dp=`` arguments pick sharded/replicated serving.
 """
 from __future__ import annotations
 
 import hashlib
 from collections import deque
+from contextlib import nullcontext
 from dataclasses import dataclass, field
 from typing import Deque, Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
 
+from repro.core import sharding as shd
+from repro.core.pspec import sharding_rules
+from repro.core.strategy import Strategy
 from repro.models import get_model, kvcache
 from repro.serve.paging import PageAllocator, pages_for
 from repro.serve.prefix import PrefixCache
 from repro.serve.sampling import sample_tokens
 from repro.serve.scheduler import FifoLeastProgress
-from repro.serve.step import prefill_bucket, scatter_prefill_pages
+from repro.serve.step import page_bucket, prefill_bucket, \
+    scatter_prefill_pages
 
 #: archs the token-only engine can serve without per-request extras.
 TOKEN_ONLY_ARCHS = ("dense", "moe", "ssm", "hybrid")
@@ -136,6 +169,7 @@ class Request:
     out: List[int] = field(default_factory=list)
     done: bool = False
     frames: Optional[np.ndarray] = None   # (enc_ctx, d_model), audio archs
+    priority: int = 0                  # scheduler hint (serve/scheduler.py)
     # memoized (ctx_len, salt) — a backpressured head-of-line request
     # re-places every step and must not re-hash its frames/context
     salt_cache: Optional[tuple] = field(default=None, repr=False)
@@ -147,7 +181,7 @@ class ServeEngine:
                  seed: int = 0, paged: Optional[bool] = None,
                  page_size: int = 16, kv_pages: Optional[int] = None,
                  prefix_cache: bool = False, lazy: bool = False,
-                 scheduler=None):
+                 scheduler=None, mesh=None, strategy=None):
         if cfg.arch_type not in SERVABLE_ARCHS:
             raise ValueError(
                 f"{cfg.name}: the engine drives token/frame decoders "
@@ -181,6 +215,21 @@ class ServeEngine:
                 "drop paged=False to use them")
         if page_size < 1:
             raise ValueError(f"page_size must be >= 1, got {page_size}")
+        # -------- intra-operator (TP) sharding: mesh + logical-axis rules
+        self.mesh = mesh
+        self.tp = int(mesh.shape.get("model", 1)) if mesh is not None else 1
+        if mesh is not None:
+            self.strategy = strategy if strategy is not None \
+                else Strategy(dtype=cfg.dtype)
+            self._rules = self.strategy.rules(mesh)
+            # Megatron param layout on the engine's mesh (a no-op when the
+            # caller already sharded them there)
+            params = jax.device_put(
+                params, shd.param_shardings(params, self.strategy, mesh))
+            self._ctx = lambda: sharding_rules(self.mesh, self._rules)
+        else:
+            self.strategy = strategy
+            self._ctx = nullcontext
         self.cfg, self.params = cfg, params
         self.model = get_model(cfg)
         self.slots = slots
@@ -224,7 +273,14 @@ class ServeEngine:
             self._cache["kv"] = kvcache.init_paged_kv(
                 cfg.num_layers, self.kv_pages + 1, page_size,
                 cfg.num_kv_heads, cfg.head_dim, dtype)
-            self._cache["ptab"] = jnp.zeros((slots, pps), jnp.int32)
+            # the DEVICE page table is clipped to the power-of-two bucket
+            # of the allocator's per-slot page high-water mark (_sync_ptab)
+            # so the decode gather reads occupancy, not max_len; the host
+            # mirror stays full-width
+            self._pps = pps
+            self._gather = 1
+            self._hw_blocks = 1
+            self._cache["ptab"] = jnp.zeros((slots, self._gather), jnp.int32)
             self._ptab = np.zeros((slots, pps), np.int64)
             self._ptab_dirty = False
             self._alloc = PageAllocator(self.kv_pages, page_size,
@@ -233,6 +289,15 @@ class ServeEngine:
                 self._prefix = PrefixCache(self._alloc, page_size)
             self._copy_page = jax.jit(kvcache.copy_page,
                                       donate_argnums=(0,))
+        if mesh is not None:
+            # place the decode state onto the mesh: pool head-sharded over
+            # "model", dense leaves per the usual cache rules, page table /
+            # cursors replicated (core/sharding.cache_pspecs)
+            self._cache = jax.device_put(
+                self._cache,
+                jax.tree.map(lambda s: NamedSharding(mesh, s),
+                             shd.cache_pspecs(self._cache, self.strategy,
+                                              mesh, slots)))
         # bucketing: attention masks make right-padding exact for dense;
         # MoE capacity routing and the SSM recurrence are perturbed by pad
         # tokens (and enc-dec prefill gathers no last_pos), so those archs
@@ -246,19 +311,47 @@ class ServeEngine:
 
     # ------------------------------------------------------------ memory
     def kv_bytes(self) -> int:
-        """Device bytes RESIDENT in the engine's decode state (KV
+        """GLOBAL device bytes RESIDENT in the engine's decode state (KV
         pool/rows, SSM states, cross-attention blocks; cursors and the
-        page table are negligible and excluded). Static for the engine's
-        lifetime — the paged pool is allocated up front. Step TRANSIENTS
-        are extra and layout-independent: paged decode gathers each slot's
-        full table width per layer (see layers.paged_attention), the same
-        O(slots * max_len) working set dense attention reads — pages
-        shrink what LIVES in HBM between steps, not the per-step
-        scratch."""
+        page table are negligible and excluded), summed over the mesh
+        when sharded. Static for the engine's lifetime — the paged pool
+        is allocated up front. Step TRANSIENTS are extra: paged decode
+        gathers each slot's BUCKETED table width per layer (the
+        occupancy high-water bound, see layers.paged_attention), so the
+        per-step scratch tracks live pages while this number is what
+        lives in HBM between steps."""
         return sum(leaf.size * leaf.dtype.itemsize
                    for key, big in self._cache.items()
                    if key not in ("pos", "ptab")
                    for leaf in jax.tree.leaves(big))
+
+    def per_device_kv_bytes(self) -> int:
+        """Resident decode-state bytes on ONE device: the head-sharded
+        pool puts ~1/tp of :meth:`kv_bytes` on each of the mesh's
+        devices (exactly 1/tp when every leaf's kv-head axis divides);
+        equals :meth:`kv_bytes` unsharded."""
+        total = 0
+        for key, big in self._cache.items():
+            if key in ("pos", "ptab"):
+                continue
+            for leaf in jax.tree.leaves(big):
+                sharding = getattr(leaf, "sharding", None)
+                if sharding is not None:
+                    shape = sharding.shard_shape(leaf.shape)
+                    total += int(np.prod(shape)) * leaf.dtype.itemsize
+                else:
+                    total += leaf.size * leaf.dtype.itemsize
+        return total
+
+    # --------------------------------------------------- device plumbing
+    def _dev(self, x):
+        """Put a host value on the engine's device(s) (replicated across
+        the mesh when sharded) so jit sees one stable input sharding —
+        uncommitted host arrays would leave the placement choice to the
+        compiler."""
+        if self.mesh is None:
+            return jnp.asarray(x)
+        return jax.device_put(x, NamedSharding(self.mesh, P()))
 
     # ------------------------------------------------------- jitted steps
     def _decode_fn(self, params, cache, tokens, pos, active, rng):
@@ -321,16 +414,26 @@ class ServeEngine:
 
     # --------------------------------------------------------- scheduling
     def submit(self, rid: int, prompt: np.ndarray, max_new: int, *,
-               frames: Optional[np.ndarray] = None):
+               frames: Optional[np.ndarray] = None, priority: int = 0):
         """Queue a request. Rejects inputs the engine can NEVER hold —
         prompts at/over ``max_len`` and, on the paged layout, requests
-        whose worst-case context needs more pages than the whole pool —
-        instead of silently clamping writes. (Transient pressure is not a
+        whose pages can never all come free — instead of deadlocking:
+        an unplaceable request would otherwise queue forever at the
+        scheduler's head, and head-of-line admission means it would wedge
+        everything behind it too. Two bounds, both against the TOTAL
+        pool: the MINIMUM admission reservation (lazy: the prompt plus
+        its first decode write; eager: the worst case up front) is what
+        ``_place`` must satisfy before the first prefill, and the
+        WORST-CASE context is what guarantees preemption can always make
+        a lone request's extend succeed under lazy growth — the liveness
+        argument in serve/scheduler.py. (Transient pressure is not a
         rejection: a request that merely has to WAIT for free pages or a
-        free slot stays queued. The worst-case bound holds under lazy
-        growth too: it is what guarantees preemption can always make a
-        lone request's extend succeed — the liveness argument in
-        serve/scheduler.py.)"""
+        free slot stays queued.)
+
+        ``priority`` is the scheduler hint carried on the Request — the
+        default FifoLeastProgress policy ignores it; ``scheduler=
+        Priority()`` admits higher values first and preempts lower ones
+        first."""
         prompt = np.asarray(prompt, np.int32).reshape(-1)
         if prompt.size == 0:
             raise ValueError(f"request {rid}: empty prompt")
@@ -342,14 +445,29 @@ class ServeEngine:
         if max_new < 1:
             raise ValueError(f"request {rid}: max_new must be >= 1")
         if self.paged:
-            need = pages_for(min(prompt.size + max_new - 1, self.max_len),
-                             self.page_size)
-            if need > self.kv_pages:
+            cap = min(prompt.size + max_new - 1, self.max_len)
+            worst = pages_for(cap, self.page_size)
+            if self.lazy:
+                need = pages_for(min(prompt.size + 1, cap), self.page_size)
+                if need > self.kv_pages:
+                    raise ValueError(
+                        f"request {rid}: minimum admission reservation is "
+                        f"{need} KV pages ({self.page_size} tokens each) "
+                        f"but the pool holds {self.kv_pages} — it could "
+                        f"never be placed; raise kv_pages or shorten the "
+                        f"prompt")
+            if worst > self.kv_pages:
                 raise ValueError(
-                    f"request {rid}: needs {need} KV pages "
-                    f"({self.page_size} tokens each) but the pool holds "
-                    f"{self.kv_pages}; raise kv_pages or lower "
+                    f"request {rid}: worst-case context needs {worst} KV "
+                    f"pages ({self.page_size} tokens each) but the pool "
+                    f"holds {self.kv_pages}; raise kv_pages or lower "
                     f"prompt+max_new")
+            # pre-book the worst case in the bounded-gather high-water at
+            # SUBMIT time: everything accepted before the first decode
+            # shares one bucket, and lazy mid-decode extends never
+            # re-bucket (_sync_ptab) — only a longer request arriving
+            # later can
+            self._hw_blocks = max(self._hw_blocks, worst)
         if self.cfg.arch_type == "audio":
             if frames is None:
                 raise ValueError(
@@ -365,7 +483,8 @@ class ServeEngine:
             raise ValueError(
                 f"request {rid}: frames are only meaningful for audio "
                 f"archs, not {self.cfg.arch_type}")
-        self.queue.append(Request(rid, prompt, int(max_new), frames=frames))
+        self.queue.append(Request(rid, prompt, int(max_new), frames=frames,
+                                  priority=int(priority)))
 
     def _free_slot(self) -> Optional[int]:
         for s in range(self.slots):
@@ -374,6 +493,31 @@ class ServeEngine:
         return None
 
     # ------------------------------------------------- paged bookkeeping
+    def _sync_ptab(self):
+        """Refresh the DEVICE page table from the host mirror, clipped to
+        the power-of-two bucket of the live page high-water mark — the
+        bounded-gather contract of layers.paged_attention. The mark is
+        the max of the allocator's per-owner page high-water and every
+        admitted request's WORST-CASE reservation (``_hw_blocks``):
+        under eager reservation the two coincide; under lazy growth the
+        worst case is pre-booked at admission so mid-decode extends
+        never cross a bucket — the one-decode-trace invariant survives
+        laziness, and the bound still only re-buckets when a LONGER
+        request is admitted. Every live slot's pages fit the bucket (the
+        mark dominates every reservation), so no table entry is
+        truncated; retired slots' frozen cursors beyond it resolve to
+        the null page via the table-width clip in
+        kvcache.write_kv_paged."""
+        w = page_bucket(max(1, self._hw_blocks,
+                            self._alloc.peak_owner_pages), cap=self._pps)
+        if w != self._gather:
+            self._gather = w
+            self._ptab_dirty = True
+        if self._ptab_dirty:
+            self._cache["ptab"] = self._dev(
+                np.ascontiguousarray(self._ptab[:, :w], np.int32))
+            self._ptab_dirty = False
+
     def _note_pool(self):
         used = self._alloc.pages_in_use
         self.stats["pages_in_use"] = used
@@ -495,19 +639,22 @@ class ServeEngine:
                 # prefill scatter must not rewrite pages other slots read;
                 # redirect those blocks to the null page
                 page_vec[:min(n_shared, npb)] = 0
-                pages = jnp.asarray(page_vec, jnp.int32)
+                pages = self._dev(page_vec.astype(np.int32))
             if qi == 0:
                 self.queue.popleft()
             else:
                 del self.queue[qi]
+            if self.paged:
+                self._sync_ptab()
             padded = np.zeros(blen, np.int32)
             padded[:n] = ctx
             extra = {} if req.frames is None else \
-                {"frames": jnp.asarray(req.frames[None])}
-            tok, self._cache = self._prefill(
-                self.params, self._cache, jnp.asarray(padded[None]), extra,
-                jnp.asarray(n - 1, jnp.int32), jnp.asarray(s, jnp.int32),
-                pages, self._next_rng())
+                {"frames": self._dev(req.frames[None])}
+            with self._ctx():
+                tok, self._cache = self._prefill(
+                    self.params, self._cache, self._dev(padded[None]), extra,
+                    self._dev(np.int32(n - 1)), self._dev(np.int32(s)),
+                    pages, self._next_rng())
             self.stats["prefills"] += 1
             tok = int(tok)
             req.out.append(tok)
@@ -563,7 +710,7 @@ class ServeEngine:
         if self._prefix is not None and self._prefix.evict_one():
             self.stats["prefix_evictions"] += 1
             return True
-        victims = [(t, len(self.active[t].out))
+        victims = [(t, len(self.active[t].out), self.active[t].priority)
                    for t in range(self.slots) if self.active[t] is not None]
         if not victims:
             return False
@@ -591,9 +738,10 @@ class ServeEngine:
             new = self._alloc.cow(s, blk)
             if new is not None:
                 if new != old:
-                    self._cache["kv"] = self._copy_page(
-                        self._cache["kv"], jnp.asarray(old, jnp.int32),
-                        jnp.asarray(new, jnp.int32))
+                    with self._ctx():
+                        self._cache["kv"] = self._copy_page(
+                            self._cache["kv"], self._dev(np.int32(old)),
+                            self._dev(np.int32(new)))
                     self._ptab[s, blk] = new
                     self._ptab_dirty = True
                     self.stats["cow_copies"] += 1
@@ -646,14 +794,14 @@ class ServeEngine:
         mask = np.array([r is not None for r in self.active])
         if not mask.any():
             return
-        if self.paged and self._ptab_dirty:
-            self._cache["ptab"] = jnp.asarray(self._ptab, jnp.int32)
-            self._ptab_dirty = False
-        tok, self._cache = self._decode(
-            self.params, self._cache,
-            jnp.asarray(self._last[:, None], jnp.int32),
-            jnp.asarray(self._pos, jnp.int32), jnp.asarray(mask),
-            self._next_rng())
+        if self.paged:
+            self._sync_ptab()
+        with self._ctx():
+            tok, self._cache = self._decode(
+                self.params, self._cache,
+                self._dev(self._last[:, None].astype(np.int32)),
+                self._dev(self._pos.astype(np.int32)), self._dev(mask),
+                self._next_rng())
         self.stats["decode_steps"] += 1
         toks = np.asarray(tok)
         for s in range(self.slots):
@@ -677,10 +825,19 @@ class ServeEngine:
         still-queued ones with ``out == []`` (both ``done=False``) when
         ``max_steps`` is exhausted — nothing vanishes."""
         steps = 0
-        while (self.queue or any(r is not None for r in self.active)) \
-                and steps < max_steps:
+        while self.busy() and steps < max_steps:
             self.step()
             steps += 1
+        return self.results()
+
+    def busy(self) -> bool:
+        """True while any request is queued or mid-decode."""
+        return bool(self.queue) or any(r is not None for r in self.active)
+
+    def results(self) -> Dict[int, Request]:
+        """Every submitted request's record so far: finished, active
+        (partial ``out``) and queued (``out == []``) — nothing vanishes.
+        Shared by :meth:`run` and serve/parallel.ReplicaRouter."""
         results = dict(self.finished)
         for req in list(self.active) + list(self.queue):
             if req is not None:

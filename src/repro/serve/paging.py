@@ -80,6 +80,7 @@ class PageAllocator:
         self._owned: Dict[Hashable, List[int]] = {}
         self._len: Dict[Hashable, int] = {}
         self._ref: Dict[int, int] = {}        # live page -> reference count
+        self._peak_owner = 0                  # high-water: pages/owner
 
     # ------------------------------------------------------------- queries
     @property
@@ -106,6 +107,15 @@ class PageAllocator:
 
     def can_alloc(self, n_tokens: int) -> bool:
         return pages_for(n_tokens, self.page_size) <= len(self._free)
+
+    @property
+    def peak_owner_pages(self) -> int:
+        """High-water mark of pages held by any SINGLE owner over the
+        allocator's lifetime (monotone). This bounds how many page-table
+        entries any slot has ever populated, so the engine's paged-
+        attention gather only needs this many blocks — decode cost tracks
+        occupancy, not the full table width (layers.paged_attention)."""
+        return self._peak_owner
 
     # ----------------------------------------------------------- mutations
     def _take_fresh(self, n: int) -> List[int]:
@@ -151,6 +161,7 @@ class PageAllocator:
         pages = shared + self._take_fresh(need)
         self._owned[owner] = pages
         self._len[owner] = n_tokens
+        self._peak_owner = max(self._peak_owner, len(pages))
         return list(pages)
 
     def extend(self, owner: Hashable, n_tokens: int) -> Optional[List[int]]:
@@ -171,6 +182,7 @@ class PageAllocator:
         fresh = self._take_fresh(max(need, 0))
         self._owned[owner].extend(fresh)
         self._len[owner] = n_tokens
+        self._peak_owner = max(self._peak_owner, len(self._owned[owner]))
         return fresh
 
     def cow(self, owner: Hashable, block: int) -> Optional[int]:

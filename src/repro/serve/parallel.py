@@ -1,0 +1,184 @@
+"""Plan-aware sharded serving: TP-sharded engines x DP replica routing.
+
+The survey's parallel-serving decomposition (Nagrecha 2023) splits a
+model server along the same two axes as training: INTRA-operator
+parallelism shards one replica's operators across ``tp`` devices, and
+DATA parallelism replicates whole engines ``dp`` times and load-balances
+requests between them. The first half lives in the ServeEngine itself —
+``ServeEngine(..., mesh=...)`` runs its one-trace prefill/decode
+programs GSPMD-sharded (Megatron param layout, head-sharded paged KV
+pool; see the engine docstring). This module supplies the second half
+plus the glue that turns a planner :class:`~repro.core.planner.Plan`
+into a serving topology:
+
+  * :func:`replica_meshes` — carve ``dp * tp`` devices into ``dp``
+    disjoint ("data", "model") = (1, tp) sub-meshes, one per replica
+    (rows of a materialized plan's mesh, so `Session.from_plan(...)
+    .serve()` serves on exactly the devices the plan reserved);
+  * :class:`ReplicaRouter` — instantiates one engine per sub-mesh and
+    routes ``submit()`` by LEAST LOAD (queued + active requests, lowest
+    replica index breaking ties), with PREFIX AFFINITY when the engines
+    run a prefix cache: requests opening with the same page-aligned
+    first block prefer the replica that already holds those shared
+    pages, so a common system prompt stays ONE physical copy per
+    replica instead of bouncing across all of them — unless that
+    replica is more than a slot-table's worth of load behind, in which
+    case least-load wins (affinity must not recreate head-of-line
+    blocking across replicas). ``run()`` advances every busy replica
+    round-robin until all drain; ``stats`` aggregates the counters and
+    keeps the per-replica breakdown (each replica still traces decode
+    exactly once — CI-asserted).
+
+Construction normally goes through ``repro.api.Session.serve(plan=...)``
+/ ``launch/serve.py --tp/--dp``; the router is independently usable with
+hand-built device lists for tests and benchmarks.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.launch.mesh import make_mesh
+from repro.serve.engine import Request, ServeEngine
+
+
+def replica_meshes(dp: int, tp: int, devices: Optional[Sequence] = None
+                   ) -> List:
+    """``dp`` disjoint ("data", "model") = (1, tp) meshes over the first
+    ``dp * tp`` devices (or the given sequence / a materialized plan
+    mesh's ``.devices`` array, whose rows are the replica slices)."""
+    import jax
+
+    if dp < 1 or tp < 1:
+        raise ValueError(f"dp and tp must be >= 1, got dp{dp} tp{tp}")
+    if devices is None:
+        devices = jax.devices()
+    devs = list(np.asarray(devices).reshape(-1))
+    if dp * tp > len(devs):
+        raise ValueError(
+            f"dp{dp} x tp{tp} = {dp * tp} devices needed but only "
+            f"{len(devs)} available (force more host devices with "
+            f"XLA_FLAGS=--xla_force_host_platform_device_count=N)")
+    return [make_mesh((1, tp), ("data", "model"),
+                      devices=devs[r * tp:(r + 1) * tp])
+            for r in range(dp)]
+
+
+class ReplicaRouter:
+    """``dp`` ServeEngine replicas behind one submit/run/stats facade.
+
+    Every engine kwarg (slots, max_len, paged, page_size, prefix_cache,
+    lazy, scheduler factory output, ...) applies to each replica;
+    ``params`` are resharded onto every replica's sub-mesh (the Megatron
+    TP layout within, full replication across). ``scheduler`` may not be
+    a shared mutable policy OBJECT across replicas — pass a fresh one
+    per replica via ``scheduler_factory`` if the policy keeps state (the
+    shipped policies are stateless, so sharing them is fine).
+    """
+
+    def __init__(self, cfg, params, *, dp: int, tp: int = 1,
+                 devices: Optional[Sequence] = None, strategy=None,
+                 **engine_kw):
+        self.dp, self.tp = int(dp), int(tp)
+        self.meshes = replica_meshes(self.dp, self.tp, devices)
+        self.engines: List[ServeEngine] = [
+            ServeEngine(cfg, params, mesh=mesh, strategy=strategy,
+                        **engine_kw)
+            for mesh in self.meshes]
+        self.cfg = cfg
+        self._home: Dict[int, int] = {}      # rid -> replica index
+        self._affine: Dict[Tuple, int] = {}  # first-block key -> replica
+
+    # ----------------------------------------------------------- routing
+    def _load(self, r: int) -> int:
+        e = self.engines[r]
+        return len(e.queue) + sum(a is not None for a in e.active)
+
+    def _affinity_key(self, prompt: np.ndarray) -> Optional[Tuple]:
+        """Page-aligned first block of the prompt — the unit the prefix
+        cache shares — as the routing key. None when the engines run no
+        prefix cache or the prompt has no full block to share."""
+        e = self.engines[0]
+        if e._prefix is None or len(prompt) < e.page_size:
+            return None
+        return tuple(int(t) for t in prompt[:e.page_size])
+
+    def route(self, prompt: np.ndarray) -> int:
+        """Replica index for ``prompt``: the affinity replica when its
+        load is within one slot-table of the minimum, else least-load
+        (lowest index breaking ties). Pure — ``submit`` records the
+        routing decision."""
+        loads = [self._load(r) for r in range(self.dp)]
+        best = min(range(self.dp), key=lambda r: (loads[r], r))
+        key = self._affinity_key(np.asarray(prompt).reshape(-1))
+        if key is not None:
+            aff = self._affine.get(key)
+            if aff is not None and \
+                    loads[aff] <= loads[best] + self.engines[aff].slots:
+                return aff
+        return best
+
+    def submit(self, rid: int, prompt, max_new: int, *,
+               frames=None, priority: int = 0) -> int:
+        """Route and enqueue one request; returns the replica index it
+        landed on. Validation (prompt/pool bounds) is the target
+        engine's — its ValueError propagates before any state changes."""
+        if rid in self._home:
+            raise ValueError(f"request {rid} was already submitted "
+                             f"(to replica {self._home[rid]})")
+        r = self.route(prompt)
+        self.engines[r].submit(rid, prompt, max_new, frames=frames,
+                               priority=priority)
+        self._home[rid] = r
+        key = self._affinity_key(np.asarray(prompt, np.int32).reshape(-1))
+        if key is not None and key not in self._affine:
+            self._affine[key] = r
+        return r
+
+    # ----------------------------------------------------------- serving
+    def step(self):
+        """Advance every busy replica by one engine step (idle replicas
+        cost nothing — their engines skip the device call)."""
+        for e in self.engines:
+            if e.busy():
+                e.step()
+
+    def run(self, max_steps: int = 10_000) -> Dict[int, Request]:
+        """Round-robin step every replica until all drain (or
+        ``max_steps`` engine steps each); returns the union of every
+        replica's request records — completed, partial and queued."""
+        steps = 0
+        while any(e.busy() for e in self.engines) and steps < max_steps:
+            self.step()
+            steps += 1
+        out: Dict[int, Request] = {}
+        for e in self.engines:
+            out.update(e.results())
+        return out
+
+    def release_prefix_cache(self) -> int:
+        return sum(e.release_prefix_cache() for e in self.engines)
+
+    # ------------------------------------------------------------- stats
+    @property
+    def stats(self) -> Dict:
+        """Counter sums across replicas, plus ``replicas`` — the
+        per-engine dicts (trace counters are per-replica properties;
+        their sum only says "one trace EACH" when every entry is 1)."""
+        per = [dict(e.stats) for e in self.engines]
+        agg: Dict = {k: sum(p[k] for p in per) for k in per[0]}
+        agg["replicas"] = per
+        return agg
+
+    def replica_of(self, rid: int) -> Optional[int]:
+        return self._home.get(rid)
+
+    def kv_bytes(self) -> int:
+        """Global resident decode-state bytes across all replicas."""
+        return sum(e.kv_bytes() for e in self.engines)
+
+    def per_device_kv_bytes(self) -> int:
+        """Resident decode-state bytes on one device (replicas are
+        disjoint, so the max over engines is the per-device figure)."""
+        return max(e.per_device_kv_bytes() for e in self.engines)

@@ -37,6 +37,15 @@ context ends mid-block, a registered block whose first tokens equal the
 context's tail can back that last partial page too. The adopting request
 will WRITE into that page at its first decode step, so the engine must
 ``allocator.cow`` + device-copy it first — see ServeEngine._grow_and_cow.
+
+Sharded serving: the cache deals only in page ids and token tuples, so
+it is blind to TP sharding (a head-sharded pool page is still one page
+id) — but it is strictly PER-REPLICA: under data-parallel serving each
+engine replica owns its own pool and its own tree, and sharing across
+replicas happens by ROUTING, not by reference. The ReplicaRouter
+(serve/parallel.py) keys affinity on the same unit this tree does — the
+page-aligned first token block — steering same-prefix requests to the
+replica whose tree already holds those pages.
 """
 from __future__ import annotations
 

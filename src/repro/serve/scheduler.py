@@ -30,6 +30,21 @@ flushed, the survivor's worst-case context fits the pool by the submit()
 bound, so its extend succeeds — a pool sized below aggregate demand
 serializes the workload instead of deadlocking (tested in
 tests/test_serve_prefix.py::test_preemption_liveness_*).
+
+Two policies ship:
+
+  * ``FifoLeastProgress`` (default) — FIFO admission, fewest-generated-
+    tokens victim;
+  * ``Priority`` — ``submit(..., priority=N)`` requests with a HIGHER
+    priority admit first (FIFO within a priority class, so equal-priority
+    traffic cannot starve each other), and under pool pressure the
+    LOWEST-priority active slot is preempted first (least progress, then
+    slot index, as tie-breaks) — background traffic yields its pages to
+    latency-sensitive requests. The head-of-line contract moves with the
+    policy: when the top-priority request cannot be placed, nothing is.
+
+Victim candidates are ``(slot, progress, priority)`` triples; policies
+that ignore priority just read the first two fields.
 """
 from __future__ import annotations
 
@@ -47,11 +62,11 @@ class FifoLeastProgress:
         engine's contract: if this request cannot be placed, nothing is."""
         return 0 if queue else None
 
-    def pick_victim(self, candidates: List[Tuple[int, int]]) -> int:
-        """Choose the slot to preempt from ``(slot, progress)`` pairs,
-        where progress counts generated tokens. Least progress first —
-        cheapest to re-prefill — with the slot index as a deterministic
-        tie-break."""
+    def pick_victim(self, candidates: List[Tuple[int, int, int]]) -> int:
+        """Choose the slot to preempt from ``(slot, progress, priority)``
+        triples, where progress counts generated tokens. Least progress
+        first — cheapest to re-prefill — with the slot index as a
+        deterministic tie-break (priority is ignored by this policy)."""
         if not candidates:
             raise ValueError("pick_victim needs at least one candidate")
         return min(candidates, key=lambda sp: (sp[1], sp[0]))[0]
@@ -59,4 +74,34 @@ class FifoLeastProgress:
     def requeue(self, queue: Deque, req) -> None:
         """Return a preempted request to the queue: at the FRONT, so FIFO
         order is preserved (it was admitted before anything now queued)."""
+        queue.appendleft(req)
+
+
+class Priority(FifoLeastProgress):
+    """Priority admission + lowest-priority preemption.
+
+    Higher ``Request.priority`` admits first; within a priority class the
+    earliest submission wins (stable FIFO). Preemption inverts it: the
+    victim is the LOWEST-priority active slot, least-progress then slot
+    index breaking ties — so pool pressure evicts background work before
+    anything latency-sensitive, the first step toward the ROADMAP's
+    gang/priority scheduling item."""
+
+    name = "priority"
+
+    def next_index(self, queue: Sequence) -> Optional[int]:
+        if not queue:
+            return None
+        return max(range(len(queue)),
+                   key=lambda i: (queue[i].priority, -i))
+
+    def pick_victim(self, candidates: List[Tuple[int, int, int]]) -> int:
+        if not candidates:
+            raise ValueError("pick_victim needs at least one candidate")
+        return min(candidates, key=lambda c: (c[2], c[1], c[0]))[0]
+
+    def requeue(self, queue: Deque, req) -> None:
+        """Front of the queue: among equal priorities the preempted
+        request was admitted first, and ``next_index`` already lets any
+        higher-priority arrival jump it."""
         queue.appendleft(req)

@@ -36,6 +36,18 @@ def prefill_bucket(n: int, *, cap: int = 0,
     return b
 
 
+def page_bucket(n_blocks: int, *, cap: int) -> int:
+    """Bucketed page-table width for the engine's bounded paged-attention
+    gather: the smallest power of two >= ``n_blocks`` (the allocator's
+    per-owner page high-water mark), clipped to ``cap`` (the full table
+    width, ``pages_for(max_len)``). Bucketing means the decode program
+    only retraces when occupancy crosses a power-of-two block boundary —
+    cost tracks the pool's live high-water mark, not ``max_len``, while
+    the one-decode-trace property holds between re-bucketings."""
+    assert n_blocks >= 1 and cap >= 1
+    return min(cap, 1 << (n_blocks - 1).bit_length())
+
+
 def scatter_prefill_pages(pool, kvs, pages, page_size: int):
     """Write a freshly-prefilled per-request KV into its pool pages.
 

@@ -358,3 +358,86 @@ def test_allocator_seeded_churn_invariants():
             assert alloc.free_pages + len(owned) == num_pages
             assert alloc.pages_in_use == sum(
                 pages_for(v, page_size) for v in lens.values())
+
+
+# ------------------------------------------- admission rejection (deadlock)
+
+def test_submit_rejects_requests_the_pool_can_never_hold():
+    """A request whose minimum admission reservation exceeds the TOTAL
+    pool could never be placed — without the submit()-time ValueError it
+    would queue forever at the scheduler's head and wedge everything
+    behind it (head-of-line admission). Eager reserves the worst case up
+    front; lazy reserves the prompt + its first decode write, but ALSO
+    bounds the worst case (preemption liveness: a lone survivor's extend
+    must eventually fit the pool)."""
+    params = _params(CFG)
+    prompt = np.arange(20, dtype=np.int32) % CFG.vocab_size
+
+    eager = ServeEngine(CFG, params, slots=2, max_len=64, paged=True,
+                        page_size=16, kv_pages=2)
+    with pytest.raises(ValueError, match="worst-case"):
+        eager.submit(0, prompt, max_new=40)       # 4 pages > pool of 2
+    assert not eager.queue
+
+    lazy = ServeEngine(CFG, params, slots=2, max_len=64, paged=True,
+                       page_size=16, kv_pages=1, lazy=True)
+    with pytest.raises(ValueError, match="minimum admission reservation"):
+        lazy.submit(0, prompt, max_new=2)         # prompt+1 -> 2 pages > 1
+    # min fits (2 pages) but the worst case (4 pages) never could: the
+    # request would be admitted, outgrow the pool mid-decode, and requeue
+    # forever — the liveness bound rejects it up front
+    lazy2 = ServeEngine(CFG, params, slots=2, max_len=64, paged=True,
+                        page_size=16, kv_pages=2, lazy=True)
+    with pytest.raises(ValueError, match="worst-case"):
+        lazy2.submit(0, np.arange(10, dtype=np.int32), max_new=60)
+
+    # boundary: exactly-at-pool requests are admitted and drain
+    ok = ServeEngine(CFG, params, slots=2, max_len=64, paged=True,
+                     page_size=16, kv_pages=2)
+    ok.submit(0, prompt, max_new=6)               # worst 25 tok -> 2 pages
+    results = ok.run()
+    assert results[0].done and len(results[0].out) == 6
+
+
+# ------------------------------------------------ bounded-gather high-water
+
+def test_paged_gather_bounded_by_live_high_water():
+    """The decode program's page table is clipped to the power-of-two
+    bucket of the live page high-water mark: short requests gather 2 of
+    the 8 table blocks (cost tracks occupancy, not max_len), outputs
+    stay exact, and the trace count moves ONLY when a longer admission
+    crosses a bucket boundary."""
+    params = _params(CFG)
+    rng = np.random.default_rng(7)
+    short = [rng.integers(0, CFG.vocab_size, size=(5,)).astype(np.int32)
+             for _ in range(3)]
+    long_p = rng.integers(0, CFG.vocab_size, size=(20,)).astype(np.int32)
+    expected = {}
+    for i, p in enumerate(short + [long_p]):
+        toks = greedy_generate(params, CFG, Strategy(),
+                               {"tokens": jnp.asarray(p)[None]}, steps=6)
+        expected[i] = [int(t) for t in toks[0]]
+
+    eng = ServeEngine(CFG, params, slots=2, max_len=64, paged=True,
+                      page_size=8)                # table width: 8 blocks
+    for i, p in enumerate(short):
+        eng.submit(i, p, max_new=6)               # worst 10 tok -> 2 pages
+    res1 = eng.run()
+    assert {i: res1[i].out for i in range(3)} == \
+        {i: expected[i] for i in range(3)}
+    assert eng._gather == 2                       # bucket(2) of 8 blocks
+    assert eng._cache["ptab"].shape[1] == 2
+    assert eng.stats["decode_traces"] == 1
+
+    # same-bucket traffic re-uses the program...
+    eng.submit(10, short[0], max_new=6)
+    eng.run()
+    assert eng.stats["decode_traces"] == 1
+
+    # ...a longer request re-buckets exactly once (2 -> bucket(4) = 4)
+    eng.submit(3, long_p, max_new=6)              # worst 25 tok -> 4 pages
+    res2 = eng.run()
+    assert res2[3].out == expected[3]
+    assert eng._gather == 4
+    assert eng._cache["ptab"].shape[1] == 4
+    assert eng.stats["decode_traces"] == 2

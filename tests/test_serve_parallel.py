@@ -1,0 +1,284 @@
+"""Plan-aware sharded serving (serve/parallel.py + ServeEngine mesh=):
+
+tp-sharded engines and dp replica routing must serve greedy outputs
+token-identical to the plain tp=1/dp=1 engine — on dense, MoE, enc-dec
+and prefix-cache-on configs — while keeping exactly ONE decode trace per
+replica and putting ~1/tp of the KV pool on each device. Router routing
+policy (least-load + prefix affinity) is unit-tested host-side, no
+device work. conftest forces 8 host devices, so tp2 x dp2 topologies fit.
+"""
+import jax
+import numpy as np
+import pytest
+
+from repro.api import Degrees, Plan, Session
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.core.strategy import Strategy
+from repro.models import get_model
+from repro.serve.engine import ServeEngine
+from repro.serve.parallel import ReplicaRouter, replica_meshes
+
+CFG = ModelConfig(name="par-dense", arch_type="dense", num_layers=2,
+                  d_model=128, num_heads=4, num_kv_heads=2, d_ff=256,
+                  vocab_size=128, dtype="float32")
+
+MOE_CFG = ModelConfig(name="par-moe", arch_type="moe", num_layers=2,
+                      d_model=64, num_heads=4, num_kv_heads=2, d_ff=128,
+                      num_experts=4, experts_per_token=2, vocab_size=128,
+                      dtype="float32")
+
+AUDIO_CFG = ModelConfig(name="par-encdec", arch_type="audio",
+                        num_layers=2, d_model=64, num_heads=4,
+                        num_kv_heads=4, d_ff=128, vocab_size=128,
+                        encoder_layers=1, encoder_ctx=12, dtype="float32")
+
+
+def _params(cfg, seed=0):
+    return get_model(cfg).init(jax.random.key(seed), cfg)
+
+
+def _prompts(rng, cfg, lens):
+    # one prefill bucket (8): a single prefill trace per replica
+    return [rng.integers(0, cfg.vocab_size, size=(n,)).astype(np.int32)
+            for n in lens]
+
+
+def _serve(cfg, params, prompts, new, *, frames=None, mesh=None, slots=2,
+           max_len=64, **kw):
+    eng = ServeEngine(cfg, params, slots=slots, max_len=max_len, mesh=mesh,
+                      **kw)
+    for i, p in enumerate(prompts):
+        eng.submit(i, p, max_new=new,
+                   frames=None if frames is None else frames[i])
+    results = eng.run()
+    return {i: results[i].out for i in results}, eng
+
+
+# -------------------------------------------------------------- tp parity
+
+def test_tp2_dense_matches_tp1():
+    """The head-sharded engine is token-identical to the unsharded one,
+    still traces prefill/decode exactly once, and holds exactly half the
+    pool per device."""
+    params = _params(CFG)
+    prompts = _prompts(np.random.default_rng(0), CFG, (5, 7, 6, 8, 5))
+    base, be = _serve(CFG, params, prompts, 6, paged=True)
+    [mesh] = replica_meshes(1, 2)
+    tp2, te = _serve(CFG, params, prompts, 6, paged=True, mesh=mesh)
+    assert tp2 == base
+    assert te.tp == 2
+    assert te.stats["decode_traces"] == 1
+    assert te.stats["prefill_traces"] == 1
+    assert be.stats["decode_traces"] == 1
+    # global pool bytes unchanged; per-device resident KV is 1/tp
+    assert te.kv_bytes() == be.kv_bytes()
+    assert te.per_device_kv_bytes() * 2 == be.per_device_kv_bytes()
+
+
+def test_tp2_moe_matches_tp1():
+    """Expert-parallel MoE decode under tp=2: single slot (the exactness
+    regime the paged tests pin) stays token-identical to tp=1."""
+    params = _params(MOE_CFG, seed=5)
+    rng = np.random.default_rng(6)
+    prompts = _prompts(rng, MOE_CFG, (5, 8, 6))
+    base, _ = _serve(MOE_CFG, params, prompts, 4, slots=1, max_len=32,
+                     paged=True, page_size=8)
+    [mesh] = replica_meshes(1, 2)
+    tp2, te = _serve(MOE_CFG, params, prompts, 4, slots=1, max_len=32,
+                     paged=True, page_size=8, mesh=mesh)
+    assert tp2 == base
+    assert te.stats["decode_traces"] == 1
+
+
+def test_tp2_encdec_matches_tp1():
+    """Enc-dec (audio): frames ride through the sharded prefill, the
+    decoder KV pages shard by head, the cross-KV stays per-slot."""
+    params = _params(AUDIO_CFG, seed=2)
+    rng = np.random.default_rng(2)
+    prompts = _prompts(rng, AUDIO_CFG, (4, 7, 5))
+    frames = [rng.standard_normal(
+        (AUDIO_CFG.encoder_ctx, AUDIO_CFG.d_model)).astype(np.float32)
+        for _ in prompts]
+    base, _ = _serve(AUDIO_CFG, params, prompts, 5, frames=frames,
+                     max_len=32, paged=True)
+    [mesh] = replica_meshes(1, 2)
+    tp2, te = _serve(AUDIO_CFG, params, prompts, 5, frames=frames,
+                     max_len=32, paged=True, mesh=mesh)
+    assert tp2 == base
+    assert te.stats["decode_traces"] == 1
+
+    router = ReplicaRouter(AUDIO_CFG, params, dp=2, slots=2, max_len=32,
+                           paged=True)
+    for i, (p, f) in enumerate(zip(prompts, frames)):
+        router.submit(i, p, max_new=5, frames=f)
+    res = router.run()
+    assert {i: res[i].out for i in res} == base
+    assert all(r["decode_traces"] == 1
+               for r in router.stats["replicas"])
+
+
+def test_tp2_prefix_cache_lazy_matches_tp1():
+    """Sharing + lazy growth under tp: host-side page bookkeeping is
+    layout-blind, so CoW/adoption still only rewrites table values — one
+    decode trace, same tokens, real prefix hits."""
+    params = _params(CFG)
+    rng = np.random.default_rng(4)
+    sys_p = rng.integers(0, CFG.vocab_size, size=(16,))
+    prompts = [np.concatenate(
+        [sys_p, rng.integers(0, CFG.vocab_size, size=(5,))]
+    ).astype(np.int32) for _ in range(4)]
+    kw = dict(paged=True, prefix_cache=True, lazy=True)
+    base, be = _serve(CFG, params, prompts, 6, **kw)
+    [mesh] = replica_meshes(1, 2)
+    tp2, te = _serve(CFG, params, prompts, 6, mesh=mesh, **kw)
+    assert tp2 == base
+    assert te.stats["decode_traces"] == 1
+    assert te.stats["prefix_hit_blocks"] > 0
+    assert te.stats["prefix_hit_blocks"] == be.stats["prefix_hit_blocks"]
+
+
+# -------------------------------------------------------------- dp parity
+
+def test_dp2_router_matches_single_engine():
+    params = _params(CFG)
+    prompts = _prompts(np.random.default_rng(1), CFG, (5, 7, 6, 8, 5, 7))
+    base, _ = _serve(CFG, params, prompts, 6, paged=True)
+    router = ReplicaRouter(CFG, params, dp=2, slots=2, max_len=64,
+                           paged=True)
+    for i, p in enumerate(prompts):
+        router.submit(i, p, max_new=6)
+    res = router.run()
+    assert {i: res[i].out for i in res} == base
+    assert all(res[i].done for i in res)
+    st = router.stats
+    assert [r["decode_traces"] for r in st["replicas"]] == [1, 1]
+    # both replicas actually served traffic
+    assert all(r["prefills"] > 0 for r in st["replicas"])
+
+
+def test_dp2_tp2_full_topology_matches():
+    """The full dp2 x tp2 = 4-device topology: sharded replicas behind
+    the router still produce the single-engine tokens, one decode trace
+    per replica, per-device KV at 1/tp."""
+    params = _params(CFG)
+    prompts = _prompts(np.random.default_rng(2), CFG, (5, 7, 6, 8))
+    base, be = _serve(CFG, params, prompts, 6, paged=True)
+    router = ReplicaRouter(CFG, params, dp=2, tp=2, slots=2, max_len=64,
+                           paged=True)
+    for i, p in enumerate(prompts):
+        router.submit(i, p, max_new=6)
+    res = router.run()
+    assert {i: res[i].out for i in res} == base
+    assert [r["decode_traces"] for r in router.stats["replicas"]] == [1, 1]
+    assert router.per_device_kv_bytes() * 2 == be.per_device_kv_bytes()
+    # replica device slices are disjoint
+    devs = [set(d.id for d in np.asarray(m.devices).ravel())
+            for m in router.meshes]
+    assert not (devs[0] & devs[1]) and all(len(d) == 2 for d in devs)
+
+
+# --------------------------------------------------------- routing policy
+
+def test_router_least_load_spreads():
+    """No prefix cache: submissions alternate across replicas (pure
+    least-load, lowest index breaking ties); nothing touches the
+    device."""
+    params = _params(CFG)
+    router = ReplicaRouter(CFG, params, dp=2, slots=2, max_len=64,
+                           paged=True)
+    rng = np.random.default_rng(0)
+    homes = [router.submit(i, rng.integers(0, 128, size=(6,)), max_new=4)
+             for i in range(6)]
+    assert homes == [0, 1, 0, 1, 0, 1]
+    assert router.replica_of(3) == 1
+    with pytest.raises(ValueError, match="already submitted"):
+        router.submit(3, rng.integers(0, 128, size=(6,)), max_new=4)
+
+
+def test_router_prefix_affinity():
+    """Same-first-block requests follow the replica holding the shared
+    pages even when it is (boundedly) more loaded; an overloaded
+    affinity target falls back to least-load."""
+    params = _params(CFG)
+    router = ReplicaRouter(CFG, params, dp=2, slots=1, max_len=64,
+                           paged=True, prefix_cache=True)
+    rng = np.random.default_rng(1)
+    shared = rng.integers(0, 128, size=(16,))
+    mk = lambda: np.concatenate(
+        [shared, rng.integers(0, 128, size=(4,))]).astype(np.int32)
+    assert router.submit(0, mk(), max_new=4) == 0      # least-load
+    assert router.submit(1, rng.integers(0, 128, size=(6,)),
+                         max_new=4) == 1               # least-load
+    # replica 0 is now as loaded as 1, but holds the shared prefix
+    assert router.submit(2, mk(), max_new=4) == 0      # affinity
+    assert router.submit(3, mk(), max_new=4) == 0      # still affinity
+    # affinity gives up once replica 0 is > slots behind the minimum
+    assert router.route(mk()) == 1
+    # short prompts (no full page-aligned block) never key affinity
+    assert router._affinity_key(np.arange(3)) is None
+
+
+def test_replica_meshes_validation():
+    with pytest.raises(ValueError, match="devices needed"):
+        replica_meshes(4, 4)
+    with pytest.raises(ValueError, match="must be >= 1"):
+        replica_meshes(0, 2)
+    meshes = replica_meshes(2, 2)
+    assert len(meshes) == 2
+    assert all(m.shape["model"] == 2 and m.shape["data"] == 1
+               for m in meshes)
+
+
+# ----------------------------------------------------------- Session wiring
+
+def test_session_serve_plan_defaults():
+    """Session.from_plan(...).serve() picks the plan's tp/dp; explicit
+    tp=/dp= override; a plain Session stays a single unsharded engine;
+    pp>1 plans are rejected with guidance."""
+    shape = ShapeConfig("host", 64, 8, "train")
+    p = Plan.from_degrees(CFG, shape, Degrees(dp=2, tp=2, pp=1))
+    session = Session.from_plan(CFG, p, devices=4, dtype="float32",
+                                remat=False)
+    eng = session.serve(slots=2, max_len=64)
+    assert isinstance(eng, ReplicaRouter)
+    assert (eng.dp, eng.tp) == (2, 2)
+    # the router serves on the devices the plan materialized
+    plan_devs = set(d.id for d in np.asarray(session.mesh.devices).ravel())
+    mesh_devs = set(d.id for m in eng.meshes
+                    for d in np.asarray(m.devices).ravel())
+    assert mesh_devs == plan_devs
+
+    single = session.serve(tp=1, dp=1, slots=2, max_len=64)
+    assert isinstance(single, ServeEngine) and single.mesh is None
+
+    tp_only = session.serve(tp=2, dp=1, slots=2, max_len=64)
+    assert isinstance(tp_only, ServeEngine) and tp_only.tp == 2
+
+    plain = Session(CFG, Strategy(dtype="float32")).serve(slots=2,
+                                                          max_len=64)
+    assert isinstance(plain, ServeEngine) and plain.mesh is None
+
+    pp_plan = Plan.from_degrees(CFG, shape, Degrees(dp=1, tp=2, pp=2))
+    pp_sess = Session.from_plan(CFG, pp_plan, devices=4, dtype="float32",
+                                remat=False)
+    with pytest.raises(ValueError, match="pp"):
+        pp_sess.serve(slots=2, max_len=64)
+    # explicit overrides bypass the pp plan entirely
+    assert isinstance(pp_sess.serve(tp=1, dp=1, slots=2, max_len=64),
+                      ServeEngine)
+
+
+def test_session_serve_tp2_matches_plain():
+    """End to end through the facade: Session.serve(tp=2) produces the
+    same tokens as the plain engine on the same params."""
+    session = Session(CFG, Strategy(dtype="float32", remat=False))
+    rng = np.random.default_rng(3)
+    prompts = _prompts(rng, CFG, (5, 7, 6))
+    plain = session.serve(slots=2, max_len=64)
+    sharded = session.serve(tp=2, slots=2, max_len=64)
+    for i, p in enumerate(prompts):
+        plain.submit(i, p, max_new=6)
+        sharded.submit(i, p, max_new=6)
+    a, b = plain.run(), sharded.run()
+    assert {i: a[i].out for i in a} == {i: b[i].out for i in b}
+    assert sharded.stats["decode_traces"] == 1
