@@ -19,11 +19,15 @@ from repro.core.strategy import MEGATRON_BASELINE, MEGATRON_SP, Strategy  # noqa
 from repro.launch.mesh import (make_host_mesh, make_mesh,  # noqa: F401
                                make_pipeline_mesh, make_production_mesh)
 from repro.train.trainer import TrainConfig, Trainer  # noqa: F401
+from repro.serve.driver import AsyncDriver, TokenStream  # noqa: F401
+from repro.serve.metrics import ServeMetrics  # noqa: F401
+from repro.serve.server import ServeHTTPServer  # noqa: F401
 from repro.api.session import Session  # noqa: F401
 
 __all__ = [
     "Session", "Plan", "plan", "Strategy", "Degrees", "Hardware", "V5E",
     "MEGATRON_BASELINE", "MEGATRON_SP", "TrainConfig", "Trainer",
+    "AsyncDriver", "TokenStream", "ServeMetrics", "ServeHTTPServer",
     "make_mesh", "make_host_mesh", "make_pipeline_mesh",
     "make_production_mesh",
 ]

@@ -14,6 +14,8 @@ execution mode behind it:
     trainer.run()
     tokens = session.generate(prompt_tokens, steps=16)   # trained params
     engine = session.serve(slots=4, max_len=256)
+    driver = session.serve_async(watchdog_timeout=30.0)  # online streaming
+    server = session.serve_http(port=8000)       # POST /generate, /metrics
     record = session.dryrun("train_4k")          # lower+compile, no alloc
 
 Params thread through: ``generate``/``serve`` after ``train`` see the
@@ -228,6 +230,37 @@ class Session:
         from repro.serve.parallel import ReplicaRouter
         return ReplicaRouter(self.cfg, self.params, dp=dp, tp=tp,
                              devices=devices, strategy=self.strategy, **kw)
+
+    # ------------------------------------------------------- online serving
+    def serve_async(self, *, watchdog_timeout: Optional[float] = None,
+                    metrics=None, start: bool = True, **serve_kw):
+        """ONLINE serving: :meth:`serve`'s engine (or ReplicaRouter —
+        every ``serve`` kwarg passes through, plan-awareness included)
+        wrapped in a :class:`~repro.serve.driver.AsyncDriver` — the step
+        loop runs on a background thread, ``submit()`` accepts requests
+        at any time and returns a per-request TokenStream, TTFT/TPOT/
+        step latencies land in ``driver.metrics``, and
+        ``watchdog_timeout`` arms stalled-step detection with
+        cancel-and-requeue recovery. ``start=False`` defers the loop so
+        a batch of submissions admits exactly like ``run()`` (the parity
+        and bench path)."""
+        from repro.serve.driver import AsyncDriver
+        return AsyncDriver(self.serve(**serve_kw),
+                           watchdog_timeout=watchdog_timeout,
+                           metrics=metrics, start=start)
+
+    def serve_http(self, *, host: str = "127.0.0.1", port: int = 0,
+                   watchdog_timeout: Optional[float] = None,
+                   **serve_kw):
+        """:meth:`serve_async` behind the stdlib HTTP front-end
+        (serve/server.py): ``POST /generate`` (optionally chunked token
+        streaming), ``GET /metrics`` (Prometheus text), ``GET /healthz``.
+        ``port=0`` binds a free port — read it back from ``.port``. The
+        returned server owns its driver; ``close()`` drains and stops
+        both."""
+        from repro.serve.server import serve_http
+        return serve_http(self.serve(**serve_kw), host=host, port=port,
+                          watchdog_timeout=watchdog_timeout)
 
     # ------------------------------------------------------------- dryrun
     def dryrun(self, shape: ShapeLike, *, verbose: bool = False,

@@ -20,6 +20,18 @@ decode program over N devices (Megatron layout, head-sharded KV pool),
 ``--tp 2 --dp 2`` needs 4 devices. On a CPU host the launcher forces 8
 virtual devices up front (before jax initializes) so both flags work out
 of the box; set XLA_FLAGS yourself to override.
+
+ONLINE mode (``--serve``) skips the synthetic batch and stands up the
+HTTP front-end (serve/server.py) on ``--port`` instead: ``POST
+/generate`` with optional chunked token streaming, ``GET /metrics``
+(Prometheus text — TTFT/TPOT p50/p90/p99, step latency, pool/prefix/
+preemption counters), ``GET /healthz``; ``--watchdog-timeout`` arms the
+stalled-step watchdog (diagnostic dump + cancel-and-requeue recovery).
+
+    PYTHONPATH=src python -m repro.launch.serve --arch qwen3-14b \
+        --serve --port 8000 --watchdog-timeout 30
+    curl -s localhost:8000/generate -d '{"prompt": [1,2,3], "max_new": 8}'
+    curl -s localhost:8000/metrics | grep serve_ttft
 """
 from __future__ import annotations
 
@@ -75,6 +87,24 @@ def main():
     ap.add_argument("--dp", type=int, default=1,
                     help="data-parallel replica count: run this many "
                          "engine replicas behind a least-load router")
+    ap.add_argument("--serve", action="store_true",
+                    help="ONLINE mode: skip the synthetic batch and "
+                         "expose the engine over HTTP — POST /generate "
+                         "(set \"stream\": true for chunked per-token "
+                         "streaming), GET /metrics (Prometheus text: "
+                         "TTFT/TPOT percentiles, step latency, pool "
+                         "counters), GET /healthz")
+    ap.add_argument("--port", type=int, default=8000,
+                    help="--serve: TCP port to bind (0 picks a free "
+                         "port, printed at startup)")
+    ap.add_argument("--host", default="127.0.0.1",
+                    help="--serve: bind address")
+    ap.add_argument("--watchdog-timeout", type=float, default=30.0,
+                    help="--serve: seconds one engine step may run "
+                         "before the watchdog logs a slot/pool "
+                         "diagnostic dump and cancels-and-requeues the "
+                         "active slots via the preemption path "
+                         "(<= 0 disables the watchdog)")
     args = ap.parse_args()
 
     cfg = get_smoke(args.arch).with_(dtype="float32")
@@ -83,12 +113,27 @@ def main():
                          "vision frontend wired into engine prefill "
                          "(see serve/step.py)")
     session = Session(cfg)
-    eng = session.serve(tp=args.tp, dp=args.dp,
-                        slots=args.slots, max_len=args.max_len,
-                        temperature=args.temperature,
-                        paged=False if args.dense else None,
-                        page_size=args.page_size, kv_pages=args.kv_pages,
-                        prefix_cache=args.prefix_cache, lazy=args.lazy)
+    serve_kw = dict(tp=args.tp, dp=args.dp,
+                    slots=args.slots, max_len=args.max_len,
+                    temperature=args.temperature,
+                    paged=False if args.dense else None,
+                    page_size=args.page_size, kv_pages=args.kv_pages,
+                    prefix_cache=args.prefix_cache, lazy=args.lazy)
+    if args.serve:
+        wt = args.watchdog_timeout if args.watchdog_timeout > 0 else None
+        server = session.serve_http(host=args.host, port=args.port,
+                                    watchdog_timeout=wt, **serve_kw)
+        print(f"serving {args.arch} on {server.url} "
+              f"(POST /generate, GET /metrics, GET /healthz; "
+              f"watchdog {'off' if wt is None else f'{wt}s'}) "
+              f"— ctrl-c to stop", flush=True)
+        try:
+            while True:
+                time.sleep(3600)
+        except KeyboardInterrupt:
+            server.close(drain=False)
+        return
+    eng = session.serve(**serve_kw)
 
     rng = np.random.default_rng(0)
     system = rng.integers(0, cfg.vocab_size, size=(args.shared_prefix,))

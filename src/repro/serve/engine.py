@@ -127,6 +127,7 @@ params so callers never thread param trees by hand, and its ``plan=`` /
 from __future__ import annotations
 
 import hashlib
+import time
 from collections import deque
 from contextlib import nullcontext
 from dataclasses import dataclass, field
@@ -250,7 +251,20 @@ class ServeEngine:
                       "pages_in_use": 0, "peak_pages": 0,
                       "prefix_hit_blocks": 0, "prefix_miss_blocks": 0,
                       "prefix_tail_hits": 0, "prefix_evictions": 0,
-                      "preemptions": 0, "cow_copies": 0}
+                      "preemptions": 0, "cow_copies": 0,
+                      # online telemetry (PR 6): step_count counts every
+                      # step() call (decode_steps only the ones that ran
+                      # the device program), decode_tokens every token
+                      # generated (prefill-sampled ones included),
+                      # wall_time_s the host seconds spent inside step(),
+                      # tokens_per_s_ewma a smoothed generation rate —
+                      # the DP router's routing signal —, and
+                      # prefix_decode_blocks the page-aligned blocks
+                      # registered from DECODE output (prompt blocks are
+                      # counted by the prefix hit/miss pair)
+                      "step_count": 0, "decode_tokens": 0,
+                      "wall_time_s": 0.0, "tokens_per_s_ewma": 0.0,
+                      "prefix_decode_blocks": 0}
         self._rng = jax.random.key(seed)
         self._sched = scheduler if scheduler is not None \
             else FifoLeastProgress()
@@ -433,7 +447,10 @@ class ServeEngine:
         ``priority`` is the scheduler hint carried on the Request — the
         default FifoLeastProgress policy ignores it; ``scheduler=
         Priority()`` admits higher values first and preempts lower ones
-        first."""
+        first.
+
+        Returns the LIVE Request record: ``out`` grows as the engine
+        decodes, which is what serve/driver.AsyncDriver streams from."""
         prompt = np.asarray(prompt, np.int32).reshape(-1)
         if prompt.size == 0:
             raise ValueError(f"request {rid}: empty prompt")
@@ -483,8 +500,10 @@ class ServeEngine:
             raise ValueError(
                 f"request {rid}: frames are only meaningful for audio "
                 f"archs, not {self.cfg.arch_type}")
-        self.queue.append(Request(rid, prompt, int(max_new), frames=frames,
-                                  priority=int(priority)))
+        req = Request(rid, prompt, int(max_new), frames=frames,
+                      priority=int(priority))
+        self.queue.append(req)
+        return req
 
     def _free_slot(self) -> Optional[int]:
         for s in range(self.slots):
@@ -656,6 +675,7 @@ class ServeEngine:
                     self._dev(np.int32(n - 1)), self._dev(np.int32(s)),
                     pages, self._next_rng())
             self.stats["prefills"] += 1
+            self.stats["decode_tokens"] += 1
             tok = int(tok)
             req.out.append(tok)
             self._pos[s] = n
@@ -698,9 +718,19 @@ class ServeEngine:
         request, partial output intact, for re-prefill."""
         req = self.active[s]
         self.active[s] = None
-        self._release_pages(s)
+        if self.paged:
+            self._release_pages(s)
         self._sched.requeue(self.queue, req)
         self.stats["preemptions"] += 1
+
+    def preempt(self, s: int):
+        """Public cancel-and-requeue of slot ``s`` (any KV layout): the
+        watchdog's recovery path (serve/driver.py). The request keeps its
+        partial output and resumes by re-prefill — greedy decode is
+        bit-identical to the uninterrupted run."""
+        if not 0 <= s < self.slots or self.active[s] is None:
+            raise ValueError(f"slot {s} holds no active request")
+        self._preempt(s)
 
     def _reclaim_one(self, needy: int) -> bool:
         """Free pool capacity for slot ``needy``: evict one cold prefix
@@ -784,38 +814,92 @@ class ServeEngine:
         return n
 
     # -------------------------------------------------------------- serve
-    def step(self):
+    def step(self) -> int:
         """Admit from the queue, grow/CoW paged reservations, then advance
         EVERY active slot with one batched device call (no call at all if
-        the table is empty)."""
+        the table is empty). Returns the number of tokens produced this
+        step (admission prefill tokens included) — the AsyncDriver's
+        streaming signal. Step timing lands in ``stats``: ``step_count``
+        and ``wall_time_s`` cover every call, and ``tokens_per_s_ewma``
+        smooths the produced-tokens rate (alpha 0.2) for the DP router's
+        latency-aware routing."""
+        t0 = time.perf_counter()
+        before = self.stats["decode_tokens"]
         self._admit()
         if self.paged and (self.lazy or self._prefix is not None):
             self._grow_and_cow()
         mask = np.array([r is not None for r in self.active])
-        if not mask.any():
-            return
+        if mask.any():
+            if self.paged:
+                self._sync_ptab()
+            with self._ctx():
+                tok, self._cache = self._decode(
+                    self.params, self._cache,
+                    self._dev(self._last[:, None].astype(np.int32)),
+                    self._dev(self._pos.astype(np.int32)), self._dev(mask),
+                    self._next_rng())
+            self.stats["decode_steps"] += 1
+            toks = np.asarray(tok)
+            for s in range(self.slots):
+                req = self.active[s]
+                if req is None:
+                    continue
+                t = int(toks[s])
+                req.out.append(t)
+                self._pos[s] += 1
+                self._last[s] = t
+                self.stats["decode_tokens"] += 1
+                if self._prefix is not None and \
+                        self._pos[s] % self.page_size == 0:
+                    self._register_decode_block(s, req)
+                hit_eos = self.eos_id is not None and t == self.eos_id
+                if len(req.out) >= req.max_new or hit_eos or \
+                        self._pos[s] >= self.max_len:
+                    self._retire(s)
+        produced = self.stats["decode_tokens"] - before
+        dt = time.perf_counter() - t0
+        self.stats["step_count"] += 1
+        self.stats["wall_time_s"] += dt
+        if produced and dt > 0:
+            rate = produced / dt
+            ewma = self.stats["tokens_per_s_ewma"]
+            self.stats["tokens_per_s_ewma"] = \
+                rate if ewma <= 0 else 0.8 * ewma + 0.2 * rate
+        return produced
+
+    def _register_decode_block(self, s: int, req: Request):
+        """DECODE-GENERATED prefix registration: slot ``s``'s cursor just
+        crossed a page boundary, so the page holding the latest block is
+        complete — register it in the radix tree under the same per-arch
+        exactness salt the prompt path uses, and a repeat continuation
+        (or this request's own post-preemption re-prefill) adopts it
+        instead of recomputing. Only the WRITTEN context counts: KV
+        exists for positions 0..pos-1 = prompt + out[:-1] (the newest
+        sampled token is the next step's input)."""
+        ctx = np.concatenate([req.prompt, np.asarray(req.out[:-1],
+                                                     np.int32)])
+        self.stats["prefix_decode_blocks"] += self._prefix.insert(
+            ctx, self._alloc.pages_of(s), salt=self._salt(req, ctx))
+
+    def reset_stats(self):
+        """Zero the telemetry counters so benches measure steady state
+        instead of since-construction — EXCEPT the trace counters
+        (``decode_traces``/``prefill_traces``): those assert program
+        identity over the engine's lifetime (the one-trace-per-bucket CI
+        property) and stay monotonic. Pool gauges restart from the
+        current occupancy; the prefix cache's hit/miss counters restart
+        from zero."""
+        keep = ("decode_traces", "prefill_traces")
+        for k, v in self.stats.items():
+            if k not in keep:
+                self.stats[k] = 0.0 if isinstance(v, float) else 0
+        if self._prefix is not None:
+            self._prefix.hit_blocks = 0
+            self._prefix.miss_blocks = 0
+            self._prefix.tail_hits = 0
         if self.paged:
-            self._sync_ptab()
-        with self._ctx():
-            tok, self._cache = self._decode(
-                self.params, self._cache,
-                self._dev(self._last[:, None].astype(np.int32)),
-                self._dev(self._pos.astype(np.int32)), self._dev(mask),
-                self._next_rng())
-        self.stats["decode_steps"] += 1
-        toks = np.asarray(tok)
-        for s in range(self.slots):
-            req = self.active[s]
-            if req is None:
-                continue
-            t = int(toks[s])
-            req.out.append(t)
-            self._pos[s] += 1
-            self._last[s] = t
-            hit_eos = self.eos_id is not None and t == self.eos_id
-            if len(req.out) >= req.max_new or hit_eos or \
-                    self._pos[s] >= self.max_len:
-                self._retire(s)
+            self._note_pool()
+            self.stats["peak_pages"] = self.stats["pages_in_use"]
 
     def run(self, max_steps: int = 10_000) -> Dict[int, Request]:
         """Serve until the queue and slot table drain (or ``max_steps``).

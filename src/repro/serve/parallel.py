@@ -16,9 +16,14 @@ into a serving topology:
     (rows of a materialized plan's mesh, so `Session.from_plan(...)
     .serve()` serves on exactly the devices the plan reserved);
   * :class:`ReplicaRouter` — instantiates one engine per sub-mesh and
-    routes ``submit()`` by LEAST LOAD (queued + active requests, lowest
-    replica index breaking ties), with PREFIX AFFINITY when the engines
-    run a prefix cache: requests opening with the same page-aligned
+    routes ``submit()`` by LATENCY-AWARE least load: once every replica
+    has a decoded-tokens/s EWMA (``engine.stats["tokens_per_s_ewma"]``,
+    updated each step) the routing score is ``load / rate`` — the
+    estimated backlog-drain time — so slow replicas get less traffic
+    than raw queue depth would give them; queue-depth (queued + active
+    requests, lowest replica index breaking ties) remains the
+    COLD-START fallback until all replicas have decoded. PREFIX
+    AFFINITY applies on top when the engines run a prefix cache: requests opening with the same page-aligned
     first block prefer the replica that already holds those shared
     pages, so a common system prompt stays ONE physical copy per
     replica instead of bouncing across all of them — unless that
@@ -95,6 +100,11 @@ class ReplicaRouter:
         e = self.engines[r]
         return len(e.queue) + sum(a is not None for a in e.active)
 
+    def _rate(self, r: int) -> float:
+        """Replica ``r``'s decoded-tokens/s EWMA (engine.stats, updated
+        every step) — 0.0 until the replica has decoded anything."""
+        return float(self.engines[r].stats["tokens_per_s_ewma"])
+
     def _affinity_key(self, prompt: np.ndarray) -> Optional[Tuple]:
         """Page-aligned first block of the prompt — the unit the prefix
         cache shares — as the routing key. None when the engines run no
@@ -105,12 +115,25 @@ class ReplicaRouter:
         return tuple(int(t) for t in prompt[:e.page_size])
 
     def route(self, prompt: np.ndarray) -> int:
-        """Replica index for ``prompt``: the affinity replica when its
-        load is within one slot-table of the minimum, else least-load
-        (lowest index breaking ties). Pure — ``submit`` records the
-        routing decision."""
+        """Replica index for ``prompt``: LATENCY-AWARE least-load once
+        every replica has a decoded-tokens/s EWMA — the score is
+        ``load / rate``, the estimated time for the replica to chew
+        through its current backlog, so a replica that decodes slower
+        (longer contexts, colder cache, noisier host) gets
+        proportionally less traffic than raw queue depth would give it.
+        Until every replica has decoded something (cold start) the
+        queue-depth proxy decides, exactly as before. The prefix-
+        AFFINITY override is unchanged: the replica already holding the
+        prompt's first shared block wins while its request-count load is
+        within one slot-table of the minimum. Pure — ``submit`` records
+        the routing decision."""
         loads = [self._load(r) for r in range(self.dp)]
-        best = min(range(self.dp), key=lambda r: (loads[r], r))
+        rates = [self._rate(r) for r in range(self.dp)]
+        if all(rate > 0.0 for rate in rates):
+            best = min(range(self.dp),
+                       key=lambda r: (loads[r] / rates[r], loads[r], r))
+        else:
+            best = min(range(self.dp), key=lambda r: (loads[r], r))
         key = self._affinity_key(np.asarray(prompt).reshape(-1))
         if key is not None:
             aff = self._affine.get(key)
@@ -165,11 +188,25 @@ class ReplicaRouter:
     def stats(self) -> Dict:
         """Counter sums across replicas, plus ``replicas`` — the
         per-engine dicts (trace counters are per-replica properties;
-        their sum only says "one trace EACH" when every entry is 1)."""
+        their sum only says "one trace EACH" when every entry is 1).
+        The PR 6 telemetry fields aggregate without double counting
+        because replicas are disjoint machines: ``step_count`` /
+        ``decode_tokens`` / ``wall_time_s`` sum to fleet totals (wall
+        time is cumulative engine-step seconds, not elapsed wall clock),
+        and ``tokens_per_s_ewma`` — a rate — sums to the fleet's
+        aggregate decode rate; per-replica rates stay readable under
+        ``replicas``."""
         per = [dict(e.stats) for e in self.engines]
         agg: Dict = {k: sum(p[k] for p in per) for k in per[0]}
         agg["replicas"] = per
         return agg
+
+    def reset_stats(self):
+        """Steady-state measurement hook: resets every replica's
+        counters (trace counters stay monotonic — see
+        ServeEngine.reset_stats)."""
+        for e in self.engines:
+            e.reset_stats()
 
     def replica_of(self, rid: int) -> Optional[int]:
         return self._home.get(rid)

@@ -1,0 +1,207 @@
+"""Stdlib-only HTTP front-end over the AsyncDriver.
+
+Three endpoints, no dependencies beyond ``http.server``:
+
+  * ``POST /generate`` — body ``{"prompt": [ids...], "max_new": N,
+    "stream": bool, "priority": int}``. Non-streaming returns one JSON
+    object ``{"rid", "tokens", "done"}`` when the request completes;
+    ``"stream": true`` switches to chunked transfer encoding and writes
+    one JSON line PER TOKEN as the engine produces it
+    (``{"rid", "token", "index"}``), closing with
+    ``{"rid", "done": true, "tokens": [...]}`` — TTFT is the wire gap
+    before the first line. Validation failures (empty prompt, pool
+    bounds, bad JSON) are HTTP 400 with the engine's message.
+  * ``GET /metrics`` — Prometheus text exposition: the driver's
+    TTFT/TPOT/step summaries plus every numeric ``engine.stats`` field
+    as ``serve_engine_*`` gauges (serve/metrics.py documents the
+    glossary).
+  * ``GET /healthz`` — ``{"status": "ok", ...}`` liveness probe with
+    queue/slot occupancy and the watchdog-fired count; a load balancer
+    can drain a replica whose watchdog keeps firing.
+
+``ServeHTTPServer`` binds a ``ThreadingHTTPServer`` (port 0 picks a free
+port — tests use that), serves on a daemon thread, and ``close()`` shuts
+it down; it closes over an existing :class:`AsyncDriver` so the engine,
+driver, and HTTP layers stay independently testable. Construction
+normally goes through ``repro.api.Session.serve_http(...)`` or
+``launch/serve.py --serve --port N``.
+"""
+from __future__ import annotations
+
+import json
+import threading
+from http.server import BaseHTTPRequestHandler, ThreadingHTTPServer
+from typing import Optional
+
+from repro.serve.driver import AsyncDriver
+
+#: request body / streamed line size guard (1 MiB)
+MAX_BODY_BYTES = 1 << 20
+
+
+def _make_handler(driver: AsyncDriver):
+    """Handler class closed over ``driver`` (BaseHTTPRequestHandler is
+    instantiated per connection by the server, so state rides on the
+    class)."""
+
+    class Handler(BaseHTTPRequestHandler):
+        protocol_version = "HTTP/1.1"
+        server_version = "repro-serve/1.0"
+
+        # silence the default per-request stderr lines; the metrics
+        # endpoint is the observability story
+        def log_message(self, fmt, *args):
+            pass
+
+        # ------------------------------------------------------ helpers
+        def _send_json(self, obj, code: int = 200):
+            body = (json.dumps(obj) + "\n").encode()
+            self.send_response(code)
+            self.send_header("Content-Type", "application/json")
+            self.send_header("Content-Length", str(len(body)))
+            self.end_headers()
+            self.wfile.write(body)
+
+        def _send_text(self, text: str, code: int = 200,
+                       ctype: str = "text/plain; version=0.0.4"):
+            body = text.encode()
+            self.send_response(code)
+            self.send_header("Content-Type", ctype)
+            self.send_header("Content-Length", str(len(body)))
+            self.end_headers()
+            self.wfile.write(body)
+
+        def _chunk(self, data: bytes):
+            self.wfile.write(f"{len(data):x}\r\n".encode())
+            self.wfile.write(data)
+            self.wfile.write(b"\r\n")
+
+        # --------------------------------------------------------- GET
+        def do_GET(self):
+            if self.path == "/metrics":
+                self._send_text(driver.render_metrics())
+            elif self.path == "/healthz":
+                stats = driver.stats()
+                self._send_json({
+                    "status": "ok",
+                    "busy": driver._busy(),
+                    "queue_depth": int(
+                        driver.metrics.queue_depth.value),
+                    "active_slots": int(
+                        driver.metrics.active_slots.value),
+                    "watchdog_fired": int(
+                        driver.metrics.watchdog_fired.value),
+                    "step_count": stats.get("step_count", 0),
+                })
+            else:
+                self._send_json({"error": f"no route {self.path}"}, 404)
+
+        # -------------------------------------------------------- POST
+        def do_POST(self):
+            if self.path != "/generate":
+                self._send_json({"error": f"no route {self.path}"}, 404)
+                return
+            try:
+                length = int(self.headers.get("Content-Length", 0))
+                if length > MAX_BODY_BYTES:
+                    raise ValueError(
+                        f"body {length}B exceeds {MAX_BODY_BYTES}B")
+                spec = json.loads(self.rfile.read(length) or b"{}")
+                prompt = spec["prompt"]
+                if not isinstance(prompt, list) or \
+                        not all(isinstance(t, int) for t in prompt):
+                    raise ValueError("prompt must be a list of token ids")
+                stream = driver.submit(
+                    prompt, int(spec.get("max_new", 16)),
+                    priority=int(spec.get("priority", 0)))
+            except (KeyError, ValueError, TypeError,
+                    json.JSONDecodeError) as e:
+                self._send_json({"error": str(e)}, 400)
+                return
+            if spec.get("stream"):
+                self._stream_response(stream)
+            else:
+                try:
+                    rec = stream.result(timeout=spec.get("timeout"))
+                except TimeoutError as e:
+                    self._send_json({"error": str(e),
+                                     "rid": stream.rid}, 504)
+                    return
+                self._send_json({"rid": stream.rid,
+                                 "tokens": list(rec.out),
+                                 "done": bool(rec.done)})
+
+        def _stream_response(self, stream):
+            """Chunked transfer: one JSON line per token, then the
+            closing record. A client disconnect mid-stream just stops
+            the writes — the request itself finishes in the engine."""
+            self.send_response(200)
+            self.send_header("Content-Type", "application/jsonlines")
+            self.send_header("Transfer-Encoding", "chunked")
+            self.end_headers()
+            tokens = []
+            try:
+                for i, tok in enumerate(stream):
+                    tokens.append(tok)
+                    self._chunk((json.dumps(
+                        {"rid": stream.rid, "token": tok, "index": i})
+                        + "\n").encode())
+                rec = stream.result(timeout=0.0)
+                self._chunk((json.dumps(
+                    {"rid": stream.rid, "done": bool(rec.done),
+                     "tokens": list(rec.out)}) + "\n").encode())
+                self.wfile.write(b"0\r\n\r\n")
+            except (BrokenPipeError, ConnectionResetError):
+                pass
+
+    return Handler
+
+
+class ServeHTTPServer:
+    """One HTTP front-end bound to an AsyncDriver.
+
+    ``port=0`` binds an ephemeral port (read it back from ``.port``).
+    ``close()`` stops the HTTP listener and, when the server owns its
+    driver (``own_driver=True``), drains and stops the driver too.
+    Usable as a context manager.
+    """
+
+    def __init__(self, driver: AsyncDriver, *, host: str = "127.0.0.1",
+                 port: int = 0, own_driver: bool = False):
+        self.driver = driver
+        self._own_driver = own_driver
+        self._httpd = ThreadingHTTPServer((host, port),
+                                          _make_handler(driver))
+        self._httpd.daemon_threads = True
+        self.host, self.port = self._httpd.server_address[:2]
+        self._thread = threading.Thread(target=self._httpd.serve_forever,
+                                        name="serve-http", daemon=True)
+        self._thread.start()
+
+    @property
+    def url(self) -> str:
+        return f"http://{self.host}:{self.port}"
+
+    def close(self, drain: bool = True):
+        self._httpd.shutdown()
+        self._httpd.server_close()
+        self._thread.join(timeout=10.0)
+        if self._own_driver:
+            self.driver.stop(drain=drain)
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        self.close(drain=not any(exc))
+
+
+def serve_http(engine, *, host: str = "127.0.0.1", port: int = 0,
+               watchdog_timeout: Optional[float] = None,
+               metrics=None) -> ServeHTTPServer:
+    """Wrap ``engine`` (ServeEngine or ReplicaRouter) in an AsyncDriver
+    and expose it over HTTP; the returned server owns the driver
+    (``close()`` stops both)."""
+    driver = AsyncDriver(engine, watchdog_timeout=watchdog_timeout,
+                         metrics=metrics)
+    return ServeHTTPServer(driver, host=host, port=port, own_driver=True)

@@ -1,0 +1,419 @@
+"""Online serving front-end (serve/metrics.py, driver.py, server.py):
+
+quantile/histogram math is pinned on edge cases (empty -> NaN, one
+sample -> that sample), the AsyncDriver's streamed greedy output must be
+BIT-IDENTICAL to a batch ``run()`` over the same submissions (dense, tp2
+and dp2 backends), the watchdog must detect an injected stalled step —
+diagnostic dump at ERROR, cancel-and-requeue recovery, request still
+completes with parity — and the HTTP layer is exercised over a real
+socket (/generate JSON + chunked streaming, /metrics Prometheus text,
+/healthz). conftest forces 8 host devices so the sharded backends fit.
+"""
+import json
+import logging
+import math
+import time
+import urllib.error
+import urllib.request
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs.base import ModelConfig
+from repro.models import get_model
+from repro.serve.driver import AsyncDriver
+from repro.serve.engine import ServeEngine
+from repro.serve.metrics import (Histogram, MetricsRegistry, ServeMetrics,
+                                 quantile)
+from repro.serve.parallel import ReplicaRouter, replica_meshes
+from repro.serve.server import serve_http
+
+CFG = ModelConfig(name="online-dense", arch_type="dense", num_layers=2,
+                  d_model=64, num_heads=4, num_kv_heads=2, d_ff=128,
+                  vocab_size=128, dtype="float32")
+
+
+def _params(cfg, seed=0):
+    return get_model(cfg).init(jax.random.key(seed), cfg)
+
+
+def _prompts(rng, cfg, lens):
+    return [rng.integers(0, cfg.vocab_size, size=(n,)).astype(np.int32)
+            for n in lens]
+
+
+def _batch_reference(cfg, params, prompts, new, **kw):
+    """Greedy outputs from a plain batch run() — the parity target."""
+    eng = ServeEngine(cfg, params, **kw)
+    for i, p in enumerate(prompts):
+        eng.submit(i, p, max_new=new)
+    results = eng.run()
+    return {i: results[i].out for i in results}
+
+
+# ------------------------------------------------------- metric math
+
+def test_quantile_empty_is_nan():
+    assert math.isnan(quantile([], 0.5))
+    h = Histogram("h")
+    assert all(math.isnan(v) for v in h.quantiles())
+    assert 'h{quantile="0.5"} NaN' in "\n".join(h.render())
+
+
+def test_quantile_one_sample_is_that_sample():
+    assert quantile([7.0], 0.0) == 7.0
+    assert quantile([7.0], 0.5) == 7.0
+    assert quantile([7.0], 1.0) == 7.0
+    h = Histogram("h")
+    h.observe(0.25)
+    assert h.quantiles([0.5, 0.9, 0.99]) == [0.25, 0.25, 0.25]
+
+
+def test_quantile_linear_interpolation():
+    vals = [float(v) for v in range(101)]       # 0..100 ascending
+    assert quantile(vals, 0.5) == 50.0
+    assert quantile(vals, 0.9) == 90.0
+    assert quantile(vals, 0.99) == 99.0
+    assert quantile([1.0, 2.0, 3.0, 4.0], 0.5) == 2.5
+    with pytest.raises(ValueError):
+        quantile(vals, 1.5)
+
+
+def test_histogram_window_exact_count_sum():
+    h = Histogram("h", window=4)
+    for v in range(1, 11):                      # 1..10
+        h.observe(float(v))
+    assert h.count == 10                        # count/sum are exact...
+    assert h.sum == 55.0
+    # ...quantiles window to the most recent 4 samples (7,8,9,10)
+    assert h.quantile(0.0) == 7.0
+    assert h.quantile(1.0) == 10.0
+
+
+def test_registry_render_and_reset():
+    r = MetricsRegistry()
+    c = r.counter("reqs_total", "requests")
+    g = r.gauge("depth")
+    h = r.histogram("lat_seconds")
+    c.inc(3)
+    g.set(2)
+    h.observe(0.5)
+    h.observe(1.5)
+    text = r.render()
+    assert "# HELP reqs_total requests" in text
+    assert "# TYPE reqs_total counter" in text
+    assert "reqs_total 3.0" in text
+    assert "# TYPE lat_seconds summary" in text
+    assert 'lat_seconds{quantile="0.5"} 1.0' in text
+    assert "lat_seconds_sum 2.0" in text
+    assert "lat_seconds_count 2" in text
+    with pytest.raises(ValueError):
+        c.inc(-1)                               # counters only go up
+    with pytest.raises(ValueError):
+        r.counter("reqs_total")                 # duplicate name
+    r.reset()
+    assert c.value == 0.0 and g.value == 0.0 and h.count == 0
+
+
+def test_serve_metrics_render_engine_stats():
+    m = ServeMetrics()
+    m.ttft.observe(0.1)
+    text = m.render(extra={"pages_in_use": 3, "paged": True,
+                           "replicas": [{"x": 1}], "wall_time_s": 0.5})
+    assert 'serve_ttft_seconds{quantile="0.5"} 0.1' in text
+    assert "serve_engine_pages_in_use 3.0" in text
+    assert "serve_engine_wall_time_s 0.5" in text
+    # bools and the router's per-replica list are not gauges
+    assert "serve_engine_paged" not in text
+    assert "serve_engine_replicas" not in text
+    lat = m.latency_summary()
+    assert lat["ttft_p50_s"] == 0.1
+    assert math.isnan(lat["tpot_p99_s"])        # nothing observed yet
+
+
+# --------------------------------------------------- streaming parity
+
+def _driver_outputs(eng, prompts, new, *, deferred=True, **drv_kw):
+    """Serve ``prompts`` through an AsyncDriver; returns ({rid: out},
+    driver). Deferred start admits exactly like batch run()."""
+    drv = AsyncDriver(eng, start=not deferred, **drv_kw)
+    streams = [drv.submit(p, max_new=new, rid=i)
+               for i, p in enumerate(prompts)]
+    if deferred:
+        drv.start()
+    out = {s.rid: s.tokens() for s in streams}
+    records = {s.rid: s.result(timeout=60.0) for s in streams}
+    drv.stop(drain=True)
+    assert all(r.done for r in records.values())
+    # the stream yielded exactly the record's tokens, in order
+    assert out == {rid: list(r.out) for rid, r in records.items()}
+    return out, drv
+
+
+def test_stream_matches_run_dense():
+    params = _params(CFG)
+    prompts = _prompts(np.random.default_rng(0), CFG, (5, 7, 6, 8))
+    base = _batch_reference(CFG, params, prompts, 6, slots=2, max_len=64,
+                            paged=True)
+    eng = ServeEngine(CFG, params, slots=2, max_len=64, paged=True)
+    out, drv = _driver_outputs(eng, prompts, 6)
+    assert out == base
+    assert eng.stats["decode_traces"] == 1      # driver loop retraced nothing
+    # per-request latencies landed: one TTFT per request, finite p50s
+    assert drv.metrics.ttft.count == len(prompts)
+    assert drv.metrics.completed.value == len(prompts)
+    lat = drv.metrics.latency_summary()
+    assert lat["ttft_p50_s"] > 0.0
+    assert lat["tpot_p50_s"] >= 0.0
+    # driver bookkeeping is bounded: finished records were handed off
+    assert not eng.finished and not drv._streams
+
+
+def test_stream_matches_run_tp2():
+    params = _params(CFG)
+    prompts = _prompts(np.random.default_rng(1), CFG, (5, 7, 6, 8, 5))
+    base = _batch_reference(CFG, params, prompts, 6, slots=2, max_len=64,
+                            paged=True)
+    [mesh] = replica_meshes(1, 2)
+    eng = ServeEngine(CFG, params, slots=2, max_len=64, paged=True,
+                      mesh=mesh)
+    out, _ = _driver_outputs(eng, prompts, 6)
+    assert out == base
+    assert eng.tp == 2
+    assert eng.stats["decode_traces"] == 1
+
+
+def test_stream_matches_run_dp2():
+    params = _params(CFG)
+    prompts = _prompts(np.random.default_rng(2), CFG, (5, 7, 6, 8, 5, 4))
+    base = _batch_reference(CFG, params, prompts, 6, slots=2, max_len=64,
+                            paged=True)
+    router = ReplicaRouter(CFG, params, dp=2, slots=2, max_len=64,
+                           paged=True)
+    out, _ = _driver_outputs(router, prompts, 6)
+    assert out == base
+    assert all(r["decode_traces"] == 1
+               for r in router.stats["replicas"])
+
+
+def test_live_submit_while_running():
+    """Requests arriving while the loop is already stepping still finish
+    with batch-identical greedy output (per-slot decode is independent of
+    co-residents, so admission timing cannot change tokens)."""
+    params = _params(CFG)
+    prompts = _prompts(np.random.default_rng(3), CFG, (5, 7, 6))
+    base = _batch_reference(CFG, params, prompts, 5, slots=2, max_len=64,
+                            paged=True)
+    eng = ServeEngine(CFG, params, slots=2, max_len=64, paged=True)
+    with AsyncDriver(eng) as drv:
+        streams = []
+        for i, p in enumerate(prompts):
+            streams.append(drv.submit(p, max_new=5, rid=i))
+            time.sleep(0.01)                    # interleave with stepping
+        out = {s.rid: list(s.result(timeout=60.0).out) for s in streams}
+    assert out == base
+
+
+# ------------------------------------------------- engine stats hooks
+
+def test_reset_stats_keeps_trace_counters():
+    params = _params(CFG)
+    prompts = _prompts(np.random.default_rng(4), CFG, (5, 7))
+    eng = ServeEngine(CFG, params, slots=2, max_len=64, paged=True)
+    for i, p in enumerate(prompts):
+        eng.submit(i, p, max_new=4)
+    eng.run()
+    st = eng.stats
+    assert st["step_count"] > 0
+    assert st["decode_tokens"] >= 2 * 4         # prefill emits 1 + decodes
+    assert st["wall_time_s"] > 0.0
+    assert st["tokens_per_s_ewma"] > 0.0
+    eng.reset_stats()
+    st = eng.stats
+    assert st["step_count"] == 0 and st["decode_steps"] == 0
+    assert st["wall_time_s"] == 0.0 and st["decode_tokens"] == 0
+    # program identity is lifetime-monotonic: traces survive the reset
+    assert st["decode_traces"] == 1 and st["prefill_traces"] == 1
+    for i, p in enumerate(prompts):
+        eng.submit(10 + i, p, max_new=4)
+    eng.run()
+    assert eng.stats["decode_traces"] == 1      # steady state: no retrace
+
+
+def test_router_stats_aggregate_and_reset():
+    params = _params(CFG)
+    prompts = _prompts(np.random.default_rng(5), CFG, (5, 7, 6, 8))
+    router = ReplicaRouter(CFG, params, dp=2, slots=2, max_len=64,
+                           paged=True)
+    for i, p in enumerate(prompts):
+        router.submit(i, p, max_new=4)
+    router.run()
+    st = router.stats
+    per = st["replicas"]
+    # sums across disjoint replicas, no double counting
+    assert st["step_count"] == sum(r["step_count"] for r in per)
+    assert st["decode_tokens"] == sum(r["decode_tokens"] for r in per)
+    assert st["tokens_per_s_ewma"] == pytest.approx(
+        sum(r["tokens_per_s_ewma"] for r in per))
+    router.reset_stats()
+    st = router.stats
+    assert st["step_count"] == 0
+    assert all(r["decode_traces"] == 1 for r in st["replicas"])
+
+
+def test_router_latency_aware_routing():
+    """With EWMAs populated, the router scores load/rate: the 4x-faster
+    replica absorbs the new request even at equal queue depth; with any
+    replica still cold (rate 0) the queue-depth fallback decides."""
+    params = _params(CFG)
+    router = ReplicaRouter(CFG, params, dp=2, slots=1, max_len=64,
+                           paged=True)
+    p = np.arange(5, dtype=np.int32) % CFG.vocab_size
+    # cold start: no replica has decoded -> least queue depth (replica 0)
+    assert router.route(p) == 0
+    router.engines[0].stats["tokens_per_s_ewma"] = 10.0
+    assert router.route(p) == 0                 # replica 1 still cold
+    # both warm, equal load: drain-time tiebreak prefers the fast one
+    router.engines[1].stats["tokens_per_s_ewma"] = 40.0
+    router.engines[0].submit(0, p, max_new=4)
+    router.engines[1].submit(1, p, max_new=4)
+    assert router.route(p) == 1                 # 1/40 < 1/10 drain time
+
+
+def test_decode_blocks_register_into_prefix_cache():
+    """Completed decode pages join the prefix cache: replaying a
+    prompt+output context hits blocks that were produced by DECODE, not
+    prefill."""
+    params = _params(CFG)
+    eng = ServeEngine(CFG, params, slots=1, max_len=64, paged=True,
+                      page_size=8, prefix_cache=True)
+    prompt = (np.arange(8) % CFG.vocab_size).astype(np.int32)
+    eng.submit(0, prompt, max_new=17)           # crosses pos 16 and 24
+    out = eng.run()[0].out
+    assert eng.stats["prefix_decode_blocks"] >= 2
+    # replay the full generated context: its second+third blocks exist
+    # ONLY because decode registered them
+    replay = np.concatenate([prompt, np.asarray(out[:16], np.int32)])
+    hits0 = eng.stats["prefix_hit_blocks"]
+    eng.submit(1, replay, max_new=2)
+    eng.run()
+    assert eng.stats["prefix_hit_blocks"] - hits0 >= 3
+
+
+# ----------------------------------------------------------- watchdog
+
+def test_watchdog_detects_injected_stall(caplog):
+    """A stalled step fires the watchdog within the timeout: diagnostics
+    dumped at ERROR, every active slot cancelled-and-requeued, and the
+    request still completes with batch-identical output."""
+    params = _params(CFG)
+    prompts = _prompts(np.random.default_rng(7), CFG, (6,))
+    base = _batch_reference(CFG, params, prompts, 8, slots=2, max_len=64,
+                            paged=True)
+    eng = ServeEngine(CFG, params, slots=2, max_len=64, paged=True)
+    # warm the engine (trace prefill + decode) so the short watchdog
+    # deadline below can only be crossed by the INJECTED stall
+    eng.submit(100, prompts[0], max_new=2)
+    eng.run()
+
+    calls = {"n": 0}
+
+    def step_fn(drv):
+        calls["n"] += 1
+        if calls["n"] == 2:                     # rid 0 is mid-decode now
+            deadline = time.monotonic() + 20.0
+            while not drv.abort_step.is_set() and \
+                    time.monotonic() < deadline:
+                time.sleep(0.01)
+            return                              # stalled step yields
+        drv.engine.step()
+
+    drv = AsyncDriver(eng, watchdog_timeout=0.25, step_fn=step_fn,
+                      start=False)
+    with caplog.at_level(logging.ERROR, logger="repro.serve"):
+        stream = drv.submit(prompts[0], max_new=8, rid=0)
+        t0 = time.monotonic()
+        drv.start()
+        rec = stream.result(timeout=60.0)
+        drv.stop(drain=True)
+    assert rec.done and list(rec.out) == base[0]
+    assert drv.metrics.watchdog_fired.value >= 1
+    assert drv.metrics.watchdog_requeued.value >= 1
+    assert eng.stats["preemptions"] >= 1        # recovery used the
+    #                                             engine's existing path
+    text = caplog.text
+    assert "step stalled" in text
+    assert "rid=0" in text                      # per-slot diagnostic row
+    assert "requeued 1 active request(s)" in text
+    # detection latency: fired well within a few timeouts of the stall
+    assert time.monotonic() - t0 < 20.0
+    assert not drv.abort_step.is_set()          # recovery cleared it
+
+
+# ---------------------------------------------------------- HTTP layer
+
+def _get(url):
+    with urllib.request.urlopen(url, timeout=30) as r:
+        return r.read().decode()
+
+
+def _post(url, obj):
+    req = urllib.request.Request(
+        url, data=json.dumps(obj).encode(),
+        headers={"Content-Type": "application/json"})
+    return urllib.request.urlopen(req, timeout=60)
+
+
+def test_http_endpoints_over_socket():
+    params = _params(CFG)
+    prompts = _prompts(np.random.default_rng(8), CFG, (5, 7))
+    base = _batch_reference(CFG, params, prompts, 6, slots=2, max_len=64,
+                            paged=True)
+    eng = ServeEngine(CFG, params, slots=2, max_len=64, paged=True)
+    with serve_http(eng, port=0) as server:
+        # non-streaming generate: full record in one JSON response
+        with _post(f"{server.url}/generate",
+                   {"prompt": [int(t) for t in prompts[0]],
+                    "max_new": 6}) as r:
+            body = json.loads(r.read())
+        assert body["done"] is True
+        assert body["tokens"] == base[0]
+
+        # streaming generate: chunked JSON lines, one per token
+        with _post(f"{server.url}/generate",
+                   {"prompt": [int(t) for t in prompts[1]],
+                    "max_new": 6, "stream": True}) as r:
+            assert r.headers["Transfer-Encoding"] == "chunked"
+            lines = [json.loads(ln) for ln in r if ln.strip()]
+        *toks, closing = lines
+        assert [ln["token"] for ln in toks] == base[1]
+        assert [ln["index"] for ln in toks] == list(range(6))
+        assert closing["done"] is True and closing["tokens"] == base[1]
+
+        # metrics scrape: TTFT/TPOT summaries + engine telemetry gauges
+        metrics = _get(f"{server.url}/metrics")
+        for name in ("serve_ttft_seconds", "serve_tpot_seconds"):
+            for q in ("0.5", "0.9", "0.99"):
+                assert f'{name}{{quantile="{q}"}}' in metrics
+        assert "serve_requests_completed_total 2.0" in metrics
+        assert "serve_engine_pages_in_use" in metrics
+        assert "serve_engine_preemptions" in metrics
+
+        # health probe
+        health = json.loads(_get(f"{server.url}/healthz"))
+        assert health["status"] == "ok"
+        assert health["step_count"] > 0
+
+        # validation failures are 400 with the reason, not a wedged socket
+        for bad in ({"max_new": 4},             # no prompt
+                    {"prompt": ["a", "b"]},     # not token ids
+                    {"prompt": []}):            # engine rejects empty
+            with pytest.raises(urllib.error.HTTPError) as ei:
+                _post(f"{server.url}/generate", bad)
+            assert ei.value.code == 400
+
+        # unknown routes
+        with pytest.raises(urllib.error.HTTPError) as ei:
+            _get(f"{server.url}/nope")
+        assert ei.value.code == 404
