@@ -21,6 +21,14 @@ signal: per-device KV ~ 1/tp of the unsharded pool, one decode trace per
 replica throughout). Any of the three forces 8 virtual host devices
 before jax initializes; override via XLA_FLAGS.
 
+``--mixed-workload`` runs the chunked-prefill comparison instead: a
+long/short-interleaved prompt mix on the paged layout, each slot count
+served once with the legacy split prefill/decode path (``mixed=False``)
+and once with the unified mixed token-slot step (``--chunk-tokens``
+budget) — the rows pin TTFT p50/p90/p99 with chunking off vs. on and
+the mixed path's bounded trace count (the CI ``mixed-batch-smoke`` job
+asserts both).
+
 CLI (JSON output, used by the CI smoke steps):
 
     PYTHONPATH=src:. python benchmarks/bench_serve_throughput.py \
@@ -54,7 +62,17 @@ TINY = ModelConfig(name="bench-serve", arch_type="dense", num_layers=2,
                    vocab_size=256, dtype="float32")
 
 
-def _workload(rng, n_requests):
+def _workload(rng, n_requests, mixed: bool = False):
+    """Uniform short prompts by default; ``mixed=True`` interleaves LONG
+    (40-56 token) and short (4-8) prompts — the chunked-prefill stress
+    mix, where a long admission stalls every decoding slot unless
+    prefill is chunked into the step budget."""
+    if mixed:
+        return [rng.integers(
+            0, TINY.vocab_size,
+            size=(int(rng.integers(40, 57) if i % 2 == 0
+                      else rng.integers(4, 9)),)).astype(np.int32)
+            for i in range(n_requests)]
     return [rng.integers(0, TINY.vocab_size,
                          size=(int(rng.integers(4, 13)),)).astype(np.int32)
             for _ in range(n_requests)]
@@ -63,10 +81,16 @@ def _workload(rng, n_requests):
 def bench(params, *, slots: int, n_requests: int, max_new: int,
           max_len: int = 64, seed: int = 0, paged: bool = False,
           page_size: int = 16, kv_pages=None, prefix_cache: bool = False,
-          lazy: bool = False, tp: int = 1, dp: int = 1) -> dict:
+          lazy: bool = False, tp: int = 1, dp: int = 1,
+          mixed=None, chunk_tokens=None, mixed_workload: bool = False
+          ) -> dict:
     kw = dict(slots=slots, max_len=max_len, paged=paged,
               page_size=page_size, kv_pages=kv_pages,
               prefix_cache=prefix_cache, lazy=lazy)
+    if mixed is not None:
+        kw["mixed"] = mixed
+    if chunk_tokens is not None:
+        kw["chunk_tokens"] = chunk_tokens
     if dp > 1:
         eng = ReplicaRouter(TINY, params, dp=dp, tp=tp, **kw)
     elif tp > 1:
@@ -75,7 +99,7 @@ def bench(params, *, slots: int, n_requests: int, max_new: int,
     else:
         eng = ServeEngine(TINY, params, **kw)
     rng = np.random.default_rng(seed)
-    prompts = _workload(rng, n_requests)
+    prompts = _workload(rng, n_requests, mixed=mixed_workload)
 
     # warm pass (batch run): traces decode + every prefill bucket
     for i, p in enumerate(prompts):
@@ -101,10 +125,13 @@ def bench(params, *, slots: int, n_requests: int, max_new: int,
     # trace counters are a PER-REPLICA property: report the worst replica
     # so "decode_traces == 1" means one trace in EVERY engine
     reps = st.get("replicas", [st])
+    rep0 = eng.engines[0] if dp > 1 else eng
     return {
         "slots": slots,
         "tp": tp,
         "dp": dp,
+        "mixed": bool(getattr(rep0, "mixed", False)),
+        "chunk_tokens": int(getattr(rep0, "chunk_tokens", 0)),
         "requests": n_requests,
         "tokens": toks,
         "wall_s": round(dt, 4),
@@ -112,7 +139,8 @@ def bench(params, *, slots: int, n_requests: int, max_new: int,
         "decode_steps": st["decode_steps"],
         "decode_traces": max(r["decode_traces"] for r in reps),
         "prefill_traces": max(r["prefill_traces"] for r in reps),
-        "paged": (eng.engines[0] if dp > 1 else eng).paged,
+        "prefill_chunk_tokens": st.get("prefill_chunk_tokens", 0),
+        "paged": rep0.paged,
         "peak_kv_bytes": eng.kv_bytes(),
         "per_device_peak_kv_bytes": eng.per_device_kv_bytes(),
         # request latency percentiles (seconds, from the driver metrics)
@@ -167,6 +195,12 @@ def main():
     ap.add_argument("--parallel-sweep", action="store_true",
                     help="sweep tp in {1,2,4} x dp in {1,2} on the paged "
                          "layout at the first --slots value")
+    ap.add_argument("--mixed-workload", action="store_true",
+                    help="chunked-prefill comparison: long/short prompt "
+                         "mix on the paged layout, each slot count run "
+                         "with mixed stepping OFF then ON")
+    ap.add_argument("--chunk-tokens", type=int, default=None,
+                    help="mixed-step token budget (engine default 256)")
     ap.add_argument("--json", type=str, default="",
                     help="write results to this path (default: stdout)")
     args = ap.parse_args()
@@ -181,6 +215,14 @@ def main():
                          tp=tp, dp=dp)
                    for tp in (1, 2, 4) for dp in (1, 2)
                    if tp * dp <= jax.device_count()]
+    elif args.mixed_workload:
+        results = [bench(params, slots=s, n_requests=args.requests,
+                         max_new=args.max_new, max_len=args.max_len,
+                         paged=True, page_size=args.page_size,
+                         kv_pages=args.kv_pages, mixed=mixed,
+                         chunk_tokens=args.chunk_tokens,
+                         mixed_workload=True)
+                   for s in args.slots for mixed in (False, True)]
     else:
         results = [bench(params, slots=s, n_requests=args.requests,
                          max_new=args.max_new, max_len=args.max_len,
@@ -195,7 +237,8 @@ def main():
             f.write(out + "\n")
         base = results[0]["tokens_per_s"]
         for r in results:
-            print(f"slots={r['slots']:>2} tp{r['tp']} dp{r['dp']} "
+            mode = " mixed" if r["mixed"] else " split"
+            print(f"slots={r['slots']:>2} tp{r['tp']} dp{r['dp']}{mode} "
                   f"{r['tokens_per_s']:>8.1f} tok/s "
                   f"({r['tokens_per_s'] / base:.2f}x, "
                   f"{r['decode_steps']} decode calls, "

@@ -151,7 +151,8 @@ class Session:
               seed: Optional[int] = None, paged: Optional[bool] = None,
               page_size: int = 16, kv_pages: Optional[int] = None,
               prefix_cache: bool = False, lazy: bool = False,
-              scheduler=None):
+              scheduler=None, mixed: Optional[bool] = None,
+              chunk_tokens: int = 256):
         """Continuous-batching engine over this session's params: one
         batched jitted decode advances the whole slot table per step.
         ``temperature > 0`` switches the on-device sampler from greedy to
@@ -197,7 +198,18 @@ class Session:
         bit-identical); ``scheduler`` overrides the admission/preemption
         policy (default: FIFO + least-progress-preempt,
         serve/scheduler.py; ``serve.scheduler.Priority`` honors
-        ``submit(..., priority=)``)."""
+        ``submit(..., priority=)``).
+
+        Mixed stepping: on the paged layout the engine defaults to the
+        unified token-slot step (``mixed=None`` -> on) — every step runs
+        ONE program over a ``chunk_tokens`` token budget shared between
+        all decoding slots and the prefill CHUNKS of newly admitted
+        requests, so long prompts no longer stall decode and prefill
+        traces collapse into the single mixed program.
+        ``mixed=False`` restores the legacy split prefill/decode path
+        (bit-identical greedy outputs either way); ``chunk_tokens``
+        (default 256, must be >= ``slots``) caps the per-step token
+        count and thereby the worst-case step latency."""
         p = plan if plan is not None else self.plan
         if tp is None or dp is None:
             if p is not None and p.degrees.pp > 1:
@@ -212,7 +224,8 @@ class Session:
                   temperature=temperature,
                   seed=self.seed if seed is None else seed,
                   paged=paged, page_size=page_size, kv_pages=kv_pages,
-                  prefix_cache=prefix_cache, lazy=lazy, scheduler=scheduler)
+                  prefix_cache=prefix_cache, lazy=lazy, scheduler=scheduler,
+                  mixed=mixed, chunk_tokens=chunk_tokens)
         if tp == 1 and dp == 1:
             return ServeEngine(self.cfg, self.params, **kw)
         # serve on the session's own device placement when its mesh IS the

@@ -12,7 +12,10 @@ prompt prefixes copy-on-write (pair with ``--shared-prefix N`` for a
 visible hit rate), and ``--lazy`` grows reservations on page-boundary
 crossings with preempt/requeue under pressure. Audio (enc-dec) archs
 serve with synthetic frame embeddings standing in for the stubbed
-mel+conv frontend.
+mel+conv frontend. On the paged layout the engine steps in MIXED mode
+by default — one program per step over a ``--chunk-tokens`` token
+budget shared between decode and chunked prefill (``--no-mixed``
+restores the legacy split prefill/decode programs).
 
 Parallel serving (serve/parallel.py): ``--tp N`` shards the one-trace
 decode program over N devices (Megatron layout, head-sharded KV pool),
@@ -77,6 +80,14 @@ def main():
                          "page at admission, grow on page-boundary "
                          "crossings, preempt/requeue when the pool runs "
                          "dry (paged layout)")
+    ap.add_argument("--no-mixed", action="store_true",
+                    help="disable the unified mixed token-slot step and "
+                         "run the legacy split prefill/decode programs "
+                         "(mixed is the default on the paged layout)")
+    ap.add_argument("--chunk-tokens", type=int, default=256,
+                    help="mixed step token budget: decode tokens for all "
+                         "active slots plus prefill chunks share this "
+                         "many tokens per step (must be >= --slots)")
     ap.add_argument("--shared-prefix", type=int, default=0, metavar="N",
                     help="prepend the same N-token system prompt to every "
                          "request (demonstrates --prefix-cache sharing)")
@@ -118,7 +129,9 @@ def main():
                     temperature=args.temperature,
                     paged=False if args.dense else None,
                     page_size=args.page_size, kv_pages=args.kv_pages,
-                    prefix_cache=args.prefix_cache, lazy=args.lazy)
+                    prefix_cache=args.prefix_cache, lazy=args.lazy,
+                    mixed=False if (args.no_mixed or args.dense) else None,
+                    chunk_tokens=args.chunk_tokens)
     if args.serve:
         wt = args.watchdog_timeout if args.watchdog_timeout > 0 else None
         server = session.serve_http(host=args.host, port=args.port,

@@ -161,7 +161,10 @@ def decode_step(params, cache, token, pos, cfg):
     With a ``"ptab"`` page table in the cache (the serve engine's paged
     layout) the decoder self-attention KV goes through the block-table
     path; the cross-attention KV stays a dense per-slot block — its length
-    is the FIXED encoder context, so paging it would buy nothing.
+    is the FIXED encoder context, so paging it would buy nothing. An
+    optional ``"wtab"`` write table redirects the KV scatter only (the
+    mixed token-slot step's shared-prefix recompute path — see the dense
+    transformer's decode_step).
     """
     x = params["tok_embed"][token].astype(jnp.dtype(cfg.dtype))
     paged = "ptab" in cache
@@ -182,7 +185,9 @@ def decode_step(params, cache, token, pos, cfg):
         h = rmsnorm(x, lp["ln1"], cfg.norm_eps)
         q, k, v = attn_qkv(lp["attn"], h, cfg, rope=False)
         if paged:
-            kv = kvcache.write_kv_paged(kv, k, v, cache["ptab"], positions)
+            kv = kvcache.write_kv_paged(kv, k, v,
+                                        cache.get("wtab", cache["ptab"]),
+                                        positions)
             ctx = paged_attention(q, kv["k"], kv["v"], cache["ptab"],
                                   positions)
         else:

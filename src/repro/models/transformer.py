@@ -170,7 +170,11 @@ def decode_step(params, cache, token, pos, cfg):
     layout — see models/kvcache.py) switches the KV write/read to the
     block-table path: scatter through the table, attend over gathered
     pages. Math is identical to the dense path, so outputs are
-    token-identical.
+    token-identical. An optional ``"wtab"`` write table redirects the KV
+    SCATTER only (attention still gathers through ``ptab``) — the mixed
+    token-slot step uses it to recompute positions whose KV already
+    lives in shared prefix pages without rewriting pages other slots
+    read (rows redirected to the null page 0).
 
     Returns (logits (B,1,V), new cache).
     """
@@ -192,7 +196,8 @@ def decode_step(params, cache, token, pos, cfg):
         h = rmsnorm(x, lp["ln1"], cfg.norm_eps)
         q, k, v = attn_qkv(lp["attn"], h, cfg, positions=positions)
         if paged:
-            kv = kvcache.write_kv_paged(kv, k, v, cache["ptab"],
+            kv = kvcache.write_kv_paged(kv, k, v,
+                                        cache.get("wtab", cache["ptab"]),
                                         positions[:, 0])
             ctx = paged_attention(q, kv["k"], kv["v"], cache["ptab"],
                                   positions[:, 0])

@@ -32,10 +32,12 @@ Locking: ONE lock serializes every engine touch (steps, submits, stats
 reads). The watchdog never takes it — it reads the pre-step snapshot and
 monotonic timestamps only, so a stalled step cannot stall its own
 detection. Cancellation is cooperative: ``abort_step`` is set by the
-watchdog; the stock jitted step cannot observe it mid-flight (XLA calls
-are uninterruptible), but an instrumented ``step_fn`` (tests inject
-stalls this way; a future chunked step can poll it between chunks)
-returns early, and either way recovery runs as soon as the step yields.
+watchdog; a single XLA call cannot observe it mid-flight (device calls
+are uninterruptible), but the mixed-step engine polls it at every CHUNK
+boundary (the driver wires ``engine.abort_event`` to this event at
+construction) and instrumented ``step_fn``s (tests inject stalls this
+way) return early — recovery then lands at sub-step latency instead of
+waiting out the full step.
 
 The driver serves a single :class:`~repro.serve.engine.ServeEngine` or a
 :class:`~repro.serve.parallel.ReplicaRouter` identically (``step`` /
@@ -163,6 +165,15 @@ class AsyncDriver:
         self._step_t0: Optional[float] = None
         self._snapshot: Dict = {}
         self._threads: List[threading.Thread] = []
+        # chunk-boundary cancellation: a mixed-step engine polls this
+        # event at the top of each step and skips launching its program
+        # while set, so watchdog recovery lands at sub-step latency
+        for e in self._engines():
+            if hasattr(e, "abort_event"):
+                e.abort_event = self.abort_step
+        # previous engine-counter readings for per-step chunk telemetry
+        self._prev_pf_tokens = 0
+        self._prev_decode_tokens = 0
         if start:
             self.start()
 
@@ -229,10 +240,13 @@ class AsyncDriver:
 
     # ------------------------------------------------------------ submit
     def submit(self, prompt, max_new: int = 16, *, rid: Optional[int] = None,
-               frames=None, priority: int = 0) -> TokenStream:
+               frames=None, priority: int = 0,
+               deadline_s: Optional[float] = None) -> TokenStream:
         """Thread-safe submission; returns the request's TokenStream.
         Validation failures (bad prompt/pool bounds) raise the engine's
-        ValueError synchronously — nothing is enqueued."""
+        ValueError synchronously — nothing is enqueued. ``deadline_s``
+        declares an SLO (see ServeEngine.submit): an expired-while-queued
+        request's stream closes with ``done=False, expired=True``."""
         if self._stop_evt.is_set():
             raise RuntimeError("driver is stopped")
         t_submit = time.monotonic()
@@ -243,7 +257,8 @@ class AsyncDriver:
                 raise ValueError(f"request {rid} already in flight")
             self._next_rid = max(self._next_rid, rid + 1)
             req = self._engine_submit(rid, prompt, max_new, frames=frames,
-                                      priority=priority)
+                                      priority=priority,
+                                      deadline_s=deadline_s)
             stream = TokenStream(rid)
             self._streams[rid] = stream
             self._requests[rid] = req
@@ -252,10 +267,11 @@ class AsyncDriver:
             self._wake.notify_all()
         return stream
 
-    def _engine_submit(self, rid, prompt, max_new, *, frames, priority):
+    def _engine_submit(self, rid, prompt, max_new, *, frames, priority,
+                       deadline_s=None):
         """Submit to either backend and return the Request record."""
         ret = self.engine.submit(rid, prompt, max_new, frames=frames,
-                                 priority=priority)
+                                 priority=priority, deadline_s=deadline_s)
         if isinstance(ret, int):       # ReplicaRouter returns the replica
             return self.engine.engines[ret].queue[-1]
         return ret
@@ -324,6 +340,7 @@ class AsyncDriver:
         self.metrics.step_latency.observe(now - t0)
         if self._stall_fired.is_set():
             self._recover()
+        self._observe_chunking()
         self._drain_tokens(now)
         self.metrics.queue_depth.set(
             sum(len(e.queue) for e in self._engines()))
@@ -331,9 +348,27 @@ class AsyncDriver:
             sum(sum(r is not None for r in e.active)
                 for e in self._engines()))
 
+    def _observe_chunking(self):
+        """Per-step mixed-batch telemetry: how many prefill-chunk tokens
+        the step processed and what fraction of its work was prefill —
+        counter DELTAS against the previous reading, clamped at zero so
+        an ``engine.reset_stats()`` mid-flight resynchronizes instead of
+        feeding negative samples."""
+        if not any(getattr(e, "mixed", False) for e in self._engines()):
+            return
+        st = self.engine.stats
+        pf, dec = st.get("prefill_chunk_tokens", 0), st["decode_tokens"]
+        dpf = max(0, pf - self._prev_pf_tokens)
+        ddec = max(0, dec - self._prev_decode_tokens)
+        self._prev_pf_tokens, self._prev_decode_tokens = pf, dec
+        if dpf + ddec > 0:
+            self.metrics.prefill_chunk.observe(dpf)
+            self.metrics.prefill_frac.observe(dpf / (dpf + ddec))
+
     def _drain_tokens(self, now: float):
         """Push every token the last step appended to its stream and
-        record TTFT/TPOT; close out completed requests."""
+        record TTFT/TPOT; close out completed (or deadline-expired)
+        requests."""
         for rid, stream in list(self._streams.items()):
             req = self._requests[rid]
             fresh = len(req.out) - stream.emitted
@@ -345,16 +380,27 @@ class AsyncDriver:
                     rid, self._submit_t[rid])
                 for _ in range(fresh):
                     if stream.emitted == 0:
-                        stream.first_token_s = now - self._submit_t[rid]
+                        # the engine stamps the first token's host time
+                        # at prefill completion, so TTFT is correct even
+                        # for requests that finish AT admission (the
+                        # stream drains them on the same loop pass)
+                        ft = getattr(req, "first_tok_t", None)
+                        stream.first_token_s = \
+                            (ft if ft is not None else now) \
+                            - self._submit_t[rid]
                         self.metrics.ttft.observe(stream.first_token_s)
                     else:
                         self.metrics.tpot.observe(gap / fresh)
                     stream._push(req.out[stream.emitted])
                 self._last_tok_t[rid] = now
                 self.metrics.tokens.inc(fresh)
-            if req.done:
-                self.metrics.completed.inc()
-                self.metrics.e2e.observe(now - self._submit_t[rid])
+            expired = getattr(req, "expired", False)
+            if req.done or expired:
+                if req.done:
+                    self.metrics.completed.inc()
+                    self.metrics.e2e.observe(now - self._submit_t[rid])
+                else:
+                    self.metrics.expired.inc()
                 stream._finish(req)
                 del self._streams[rid]
                 self._requests.pop(rid, None)

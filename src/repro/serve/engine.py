@@ -62,14 +62,33 @@ All of it is host-side bookkeeping plus page-table VALUES — prefill and
 decode stay exactly one trace each, sharing or not (asserted by the CI
 paged-serve smoke and tests/test_serve_prefix.py).
 
-Admission fills free slots from a FIFO queue between steps (the standard
-orca/vllm outer loop). Prefill pads prompts to power-of-two buckets
-(serve/step.prefill_bucket) so XLA retraces at most log2(max_len) prefill
-shapes; paged prefill additionally rounds the bucket up to whole pages
-and scatters the fresh KV page-wise (serve/step.scatter_prefill_pages),
-skipping blocks the prefix cache already holds. Sampling (greedy or
-temperature) runs on device inside the same jitted step
-(serve/sampling.py).
+MIXED token-slot stepping (default on the paged layout, PR 7): instead
+of the two-program prefill/decode split, each step runs ONE program over
+a ``chunk_tokens``-token batch — every decoding slot's next token first,
+then prefill CHUNKS of admitted-but-unprefilled requests
+(sglang/vLLM-style chunked prefill). Admission only reserves pages and
+enqueues the prefill work; the step loop drains it cursor-by-cursor
+through the paged KV scatter, sampling a request's first token on the
+chunk containing its final prompt position. A long prompt therefore
+never stalls decoding slots — it shares each step's budget with them
+(TTFT p99 under mixed workloads is the win the bench's
+``--mixed-workload`` mode measures). Chunking is EXACT: the program
+scatters every chunk token's K/V before the attention gathers, so greedy
+output is bit-identical to the legacy split path (test-pinned for dense,
+MoE and enc-dec, tp2/dp2 included), and the batch is statically
+``chunk_tokens`` wide, so the program retraces once per page bucket —
+trace count stays bounded. ``mixed=False`` keeps the legacy split path
+on the paged layout; dense-layout archs (SWA ring, SSM/hybrid) always
+use it.
+
+Legacy admission fills free slots from a FIFO queue between steps (the
+standard orca/vllm outer loop). Prefill pads prompts to power-of-two
+buckets (serve/step.prefill_bucket) so XLA retraces at most
+log2(max_len) prefill shapes; paged prefill additionally rounds the
+bucket up to whole pages and scatters the fresh KV page-wise
+(serve/step.scatter_prefill_pages), skipping blocks the prefix cache
+already holds. Sampling (greedy or temperature) runs on device inside
+the same jitted step (serve/sampling.py).
 
 Caveats: MoE archs skip prompt bucketing, and their batched decode can
 differ from single-request decode — capacity-based expert routing couples
@@ -146,8 +165,8 @@ from repro.serve.paging import PageAllocator, pages_for
 from repro.serve.prefix import PrefixCache
 from repro.serve.sampling import sample_tokens
 from repro.serve.scheduler import FifoLeastProgress
-from repro.serve.step import page_bucket, prefill_bucket, \
-    scatter_prefill_pages
+from repro.serve.step import (pack_token_budget, page_bucket,
+                              prefill_bucket, scatter_prefill_pages)
 
 #: archs the token-only engine can serve without per-request extras.
 TOKEN_ONLY_ARCHS = ("dense", "moe", "ssm", "hybrid")
@@ -163,7 +182,9 @@ class Request:
     can distinguish completion (``done=True``) from truncation by
     ``max_steps`` (``done=False`` with partial/empty ``out``). A preempted
     request keeps its partial ``out`` while requeued — re-admission
-    prefills over prompt+out and resumes."""
+    prefills over prompt+out and resumes. A request whose ``deadline``
+    passes while still QUEUED finishes ``done=False, expired=True``
+    instead of occupying the scheduler's head."""
     rid: int
     prompt: np.ndarray                 # (len,) int32
     max_new: int
@@ -171,6 +192,11 @@ class Request:
     done: bool = False
     frames: Optional[np.ndarray] = None   # (enc_ctx, d_model), audio archs
     priority: int = 0                  # scheduler hint (serve/scheduler.py)
+    deadline: Optional[float] = None   # absolute time.monotonic() SLO bound
+    expired: bool = False              # deadline passed while queued
+    # host timestamp of the FIRST generated token (set at prefill
+    # completion, so TTFT covers requests that finish at admission)
+    first_tok_t: Optional[float] = field(default=None, repr=False)
     # memoized (ctx_len, salt) — a backpressured head-of-line request
     # re-places every step and must not re-hash its frames/context
     salt_cache: Optional[tuple] = field(default=None, repr=False)
@@ -182,7 +208,8 @@ class ServeEngine:
                  seed: int = 0, paged: Optional[bool] = None,
                  page_size: int = 16, kv_pages: Optional[int] = None,
                  prefix_cache: bool = False, lazy: bool = False,
-                 scheduler=None, mesh=None, strategy=None):
+                 scheduler=None, mesh=None, strategy=None,
+                 mixed: Optional[bool] = None, chunk_tokens: int = 256):
         if cfg.arch_type not in SERVABLE_ARCHS:
             raise ValueError(
                 f"{cfg.name}: the engine drives token/frame decoders "
@@ -216,6 +243,26 @@ class ServeEngine:
                 "drop paged=False to use them")
         if page_size < 1:
             raise ValueError(f"page_size must be >= 1, got {page_size}")
+        # -------- mixed token-slot stepping (chunked prefill, PR 7):
+        # ONE program per step processes every active slot's decode token
+        # plus prefill CHUNKS of admitted-but-unprefilled requests inside
+        # a bounded token budget. Default wherever the paged layout is —
+        # chunking rides on the page-table scatter/gather; dense layouts
+        # keep the legacy two-program split.
+        if mixed is None:
+            mixed = bool(paged)
+        if mixed and not paged:
+            raise ValueError(
+                f"{cfg.name}: the mixed token-slot step writes prefill "
+                "chunks through the paged KV scatter; drop paged=False "
+                "(or pass mixed=False) to serve this arch")
+        if mixed and chunk_tokens < max(slots, 1):
+            raise ValueError(
+                f"chunk_tokens ({chunk_tokens}) must be >= slots "
+                f"({slots}): every active slot's decode token is "
+                "reserved in the budget before any prefill chunk")
+        self.mixed = bool(mixed)
+        self.chunk_tokens = int(chunk_tokens)
         # -------- intra-operator (TP) sharding: mesh + logical-axis rules
         self.mesh = mesh
         self.tp = int(mesh.shape.get("model", 1)) if mesh is not None else 1
@@ -264,7 +311,13 @@ class ServeEngine:
                       # counted by the prefix hit/miss pair)
                       "step_count": 0, "decode_tokens": 0,
                       "wall_time_s": 0.0, "tokens_per_s_ewma": 0.0,
-                      "prefix_decode_blocks": 0}
+                      "prefix_decode_blocks": 0,
+                      # mixed-step telemetry (PR 7): prefill tokens
+                      # processed as chunks, deadline-expired queued
+                      # requests, audio encoder traces (the mixed path
+                      # runs the encoder as its own small program)
+                      "prefill_chunk_tokens": 0, "expired": 0,
+                      "encode_traces": 0}
         self._rng = jax.random.key(seed)
         self._sched = scheduler if scheduler is not None \
             else FifoLeastProgress()
@@ -322,6 +375,21 @@ class ServeEngine:
              if "kv" in self._cache else max_len)
         self._decode = jax.jit(self._decode_fn, donate_argnums=(1,))
         self._prefill = jax.jit(self._prefill_fn, donate_argnums=(1,))
+        # mid-prefill slot table (mixed step): slot -> {ctx, n, cursor,
+        # covered, dep, salt, seq}. Always present so the legacy path's
+        # _grow_and_cow/_preempt can check membership unconditionally.
+        self._pf: Dict[int, dict] = {}
+        self._admit_seq = 0
+        # chunk-boundary cancellation hook: the AsyncDriver points this
+        # at its ``abort_step`` Event; a set flag makes step() return
+        # before launching the next program (watchdog recovery then runs
+        # at sub-step latency instead of waiting out a full step)
+        self.abort_event = None
+        if self.mixed:
+            self._mixed = jax.jit(self._mixed_fn, donate_argnums=(1,))
+            if cfg.arch_type == "audio":
+                self._encode = jax.jit(self._encode_fn,
+                                       donate_argnums=(1,))
 
     # ------------------------------------------------------------ memory
     def kv_bytes(self) -> int:
@@ -420,6 +488,58 @@ class ServeEngine:
                     lambda b, o: b.at[:, slot].set(o[:, 0]), big, c1[key])
         return tok, out
 
+    def _mixed_fn(self, params, cache, tokens, pos, slot, active, wnull,
+                  rng):
+        """ONE device program for a mixed token-slot batch: ``tokens`` is
+        a (T, 1) column of T = ``chunk_tokens`` work items — decode
+        tokens, prefill-chunk tokens and pads — each tagged with its
+        ``pos`` (context position), ``slot`` (page-table row), ``active``
+        (sample a token from this row's logits) and ``wnull`` (redirect
+        this row's KV write to the null page: the position's KV already
+        lives in shared prefix pages, or the row is padding).
+
+        Exactness: ``decode_step`` scatters EVERY row's K/V per layer
+        before the paged attention gathers, so a chunk's tokens attend to
+        each other (and to a same-program donor's chunk) exactly as the
+        monolithic prefill would — chunked prefill of a causal decoder is
+        bit-identical. T is static and the page-table gather width is
+        page-bucketed, so the program retraces once per (token budget,
+        page bucket) — the bounded-trace invariant CI asserts. The
+        (T, 1) layout keeps a token axis per work item, so multi-token
+        speculative decode (ROADMAP #2) widens columns, not the design.
+        """
+        self.stats["decode_traces"] += 1    # Python side effect: trace-time only
+        ptab_rows = cache["ptab"][slot]               # (T, table_width)
+        view = {"kv": cache["kv"], "ptab": ptab_rows,
+                "wtab": jnp.where(wnull[:, None], 0, ptab_rows)}
+        if "xkv" in cache:
+            view["xkv"] = jax.tree.map(lambda a: a[:, slot], cache["xkv"])
+        logits, out = self.model.decode_step(params, view, tokens, pos,
+                                             self.cfg)
+        tok = sample_tokens(logits[:, -1], rng=rng,
+                            temperature=self.temperature)
+        tok = jnp.where(active, tok, 0)
+        new = {"kv": out["kv"], "pos": cache["pos"],
+               "ptab": cache["ptab"]}
+        if "xkv" in cache:
+            new["xkv"] = cache["xkv"]
+        return tok, new
+
+    def _encode_fn(self, params, xkv, frames, slot):
+        """Audio admission under the mixed step: run the encoder and park
+        the per-layer cross-attention K/V in slot ``slot``'s block (the
+        legacy path did this inside the monolithic prefill program).
+        Takes ONLY the xkv leaves — frame shape and xkv block are fixed
+        per config, so the program traces once regardless of how the
+        page-table bucket evolves."""
+        self.stats["encode_traces"] += 1    # Python side effect: trace-time only
+        enc_out = self.model.encode(params, frames, self.cfg)
+        xkvs = jax.vmap(
+            lambda lp: self.model.cross_kv(lp, enc_out, self.cfg))(
+            params["dec_layers"])
+        return jax.tree.map(
+            lambda big, new: big.at[:, slot].set(new[:, 0]), xkv, xkvs)
+
     def _next_rng(self):
         if self.temperature <= 0.0:
             return None
@@ -428,7 +548,8 @@ class ServeEngine:
 
     # --------------------------------------------------------- scheduling
     def submit(self, rid: int, prompt: np.ndarray, max_new: int, *,
-               frames: Optional[np.ndarray] = None, priority: int = 0):
+               frames: Optional[np.ndarray] = None, priority: int = 0,
+               deadline_s: Optional[float] = None):
         """Queue a request. Rejects inputs the engine can NEVER hold —
         prompts at/over ``max_len`` and, on the paged layout, requests
         whose pages can never all come free — instead of deadlocking:
@@ -448,6 +569,12 @@ class ServeEngine:
         default FifoLeastProgress policy ignores it; ``scheduler=
         Priority()`` admits higher values first and preempts lower ones
         first.
+
+        ``deadline_s`` declares an SLO: the shipped policies admit the
+        nearest deadline first (and give it prefill-budget priority in
+        the mixed step), and a request still QUEUED when its deadline
+        passes finishes ``done=False, expired=True`` at the next step
+        instead of blocking the scheduler's head.
 
         Returns the LIVE Request record: ``out`` grows as the engine
         decodes, which is what serve/driver.AsyncDriver streams from."""
@@ -500,10 +627,36 @@ class ServeEngine:
             raise ValueError(
                 f"request {rid}: frames are only meaningful for audio "
                 f"archs, not {self.cfg.arch_type}")
+        deadline = None
+        if deadline_s is not None:
+            if deadline_s <= 0:
+                raise ValueError(
+                    f"request {rid}: deadline_s must be > 0, got "
+                    f"{deadline_s}")
+            deadline = time.monotonic() + float(deadline_s)
         req = Request(rid, prompt, int(max_new), frames=frames,
-                      priority=int(priority))
+                      priority=int(priority), deadline=deadline)
         self.queue.append(req)
         return req
+
+    def _expire_queued(self, now: float):
+        """Finish every QUEUED request whose deadline has passed with
+        ``done=False, expired=True`` (partial output from a preemption
+        rides along) — an expired request must not wedge the scheduler's
+        head-of-line contract. Active slots are never expired: their
+        pages are committed and finishing them is strictly cheaper than
+        wasting the work."""
+        if not any(r.deadline is not None for r in self.queue):
+            return
+        kept: Deque[Request] = deque()
+        for req in self.queue:
+            if req.deadline is not None and now > req.deadline:
+                req.expired = True
+                self.finished[req.rid] = req
+                self.stats["expired"] += 1
+            else:
+                kept.append(req)
+        self.queue = kept
 
     def _free_slot(self) -> Optional[int]:
         for s in range(self.slots):
@@ -678,6 +831,8 @@ class ServeEngine:
             self.stats["decode_tokens"] += 1
             tok = int(tok)
             req.out.append(tok)
+            if req.first_tok_t is None:
+                req.first_tok_t = time.monotonic()
             self._pos[s] = n
             self._last[s] = tok
             # honor max_new / EOS / capacity on the PREFILL-sampled token:
@@ -692,6 +847,134 @@ class ServeEngine:
                     self._release_pages(s)
             else:
                 self.active[s] = req
+
+    # ------------------------------------------- mixed (chunked) admission
+    def _place_mixed(self, s: int, req: Request, ctx: np.ndarray):
+        """Reserve slot ``s``'s pages for MIXED admission — like
+        :meth:`_place` but prefill happens later, chunk by chunk, so the
+        radix tree is NOT updated here (the step loop inserts
+        progressively as the cursor passes block boundaries) and the
+        match can additionally adopt pages from a slot still
+        MID-PREFILL over the same context (the tree only knows blocks a
+        donor's cursor already passed). Returns ``(pages, covered,
+        dep)``: ``covered`` counts context tokens whose KV this slot
+        must NOT rewrite (shared pages), ``dep`` is ``(donor_slot,
+        needed_tokens)`` when some of that coverage is still being
+        written by a donor — the budget packer holds this slot's chunks
+        until the donor's planned cursor reaches ``needed_tokens``.
+        ``(None, 0, None)`` on backpressure."""
+        n = len(ctx)
+        if self.lazy:
+            reserve = min(n + 1, n + req.max_new - len(req.out) - 1,
+                          self.max_len)
+        else:
+            reserve = min(n + req.max_new - len(req.out) - 1, self.max_len)
+        ps = self.page_size
+        shared: List[int] = []
+        covered = 0
+        dep = None
+        salt = None
+        tail_page = None
+        if self._prefix is not None:
+            salt = self._salt(req, ctx)
+            full_pages, tail_page, _ = self._prefix.match(
+                ctx, salt=salt, want_tail=self.lazy)
+            shared = list(full_pages)
+            covered = len(full_pages) * ps
+            if tail_page is not None:
+                # a matched tail block covers the ENTIRE remaining
+                # context (prefix.match's contract), so nothing is left
+                # to prefill-write; CoW duplicates it before the first
+                # decode write (lazy-only, as on the legacy path)
+                shared.append(tail_page)
+                covered = n
+            elif covered < n:
+                # in-flight donor: a mid-prefill slot over the same
+                # context extends coverage beyond the tree
+                for d, st in self._pf.items():
+                    if st["salt"] != salt:
+                        continue
+                    dctx = st["ctx"]
+                    lim = min(n, len(dctx)) // ps * ps
+                    m = covered
+                    while m + ps <= lim and np.array_equal(
+                            ctx[m:m + ps], dctx[m:m + ps]):
+                        m += ps
+                    if m > covered:
+                        dpages = self._alloc.pages_of(d)
+                        shared.extend(dpages[covered // ps:m // ps])
+                        dep = (d, m)
+                        covered = m
+                        break
+        got = self._alloc.alloc(s, reserve, shared=shared)
+        if got is None and self._prefix is not None:
+            need = (pages_for(reserve, ps) - len(shared)
+                    - self._alloc.free_pages)
+            keep = frozenset(shared)
+            if 0 < need <= self._prefix.evictable_pages(keep=keep):
+                while need > 0 and self._prefix.evict_one(keep=keep):
+                    self.stats["prefix_evictions"] += 1
+                    need -= 1
+                got = self._alloc.alloc(s, reserve, shared=shared)
+        if got is None:
+            return None, 0, None
+        if self._prefix is not None:
+            # every covered block — tree hit or in-flight adoption — is
+            # prefill work this request skips
+            full = covered // ps if tail_page is None else len(full_pages)
+            self._prefix.hit_blocks += full
+            self._prefix.miss_blocks += n // ps - full
+            if tail_page is not None:
+                self._prefix.tail_hits += 1
+        self._note_pool()
+        return got, covered, dep
+
+    def _admit_mixed(self):
+        """Mixed-step admission: place pages and ENQUEUE the prefill work
+        (no device call here — the step loop drains it chunk by chunk
+        through the one mixed program). The slot is active immediately;
+        its first token is sampled on the chunk containing the final
+        prompt position."""
+        while True:
+            qi = self._sched.next_index(self.queue)
+            if qi is None:
+                return
+            s = self._free_slot()
+            if s is None:
+                return
+            req = self.queue[qi]
+            ctx = req.prompt if not req.out else np.concatenate(
+                [req.prompt, np.asarray(req.out, np.int32)])
+            n = len(ctx)
+            got, covered, dep = self._place_mixed(s, req, ctx)
+            if got is None:
+                return
+            self._ptab[s] = 0
+            self._ptab[s, :len(got)] = got
+            self._ptab_dirty = True
+            if qi == 0:
+                self.queue.popleft()
+            else:
+                del self.queue[qi]
+            if req.frames is not None:
+                with self._ctx():
+                    self._cache["xkv"] = self._encode(
+                        self.params, self._cache["xkv"],
+                        self._dev(req.frames[None]),
+                        self._dev(np.int32(s)))
+            self.active[s] = req
+            self._pos[s] = 0
+            self._last[s] = 0
+            # cursor = next context position to compute; covered KV is
+            # skipped EXCEPT the final prompt token, which must run for
+            # its first-token logits (its write goes to the null page)
+            self._pf[s] = {
+                "ctx": ctx, "n": n, "cursor": int(min(covered, n - 1)),
+                "covered": int(covered), "dep": dep,
+                "salt": (self._salt(req, ctx)
+                         if self._prefix is not None else None),
+                "seq": self._admit_seq}
+            self._admit_seq += 1
 
     def _release_pages(self, s: int):
         """Drop slot ``s``'s page references (shared prefix pages stay
@@ -715,13 +998,22 @@ class ServeEngine:
     def _preempt(self, s: int):
         """Evict slot ``s`` mid-decode: release its pages (prefix pages
         merely drop a reference and usually stay cached) and requeue the
-        request, partial output intact, for re-prefill."""
+        request, partial output intact, for re-prefill. A MID-PREFILL
+        victim (mixed step) additionally cascades to any dependent slot
+        that adopted its pages beyond what its cursor wrote — that KV
+        will never exist, so the dependent re-prefills too."""
         req = self.active[s]
+        st = self._pf.pop(s, None)
         self.active[s] = None
         if self.paged:
             self._release_pages(s)
         self._sched.requeue(self.queue, req)
         self.stats["preemptions"] += 1
+        if st is not None:
+            for d, dst in list(self._pf.items()):
+                if dst["dep"] is not None and dst["dep"][0] == s \
+                        and st["cursor"] < dst["dep"][1]:
+                    self._preempt(d)
 
     def preempt(self, s: int):
         """Public cancel-and-requeue of slot ``s`` (any KV layout): the
@@ -787,7 +1079,10 @@ class ServeEngine:
         (including the needy one) when the pool runs dry."""
         ps = self.page_size
         for s in range(self.slots):
-            if self.active[s] is None:
+            # mid-prefill slots (mixed step) neither decode-write nor
+            # grow this step — and their shared head blocks must NOT be
+            # CoW'd (pos is still 0, but the block is a prefix hit)
+            if self.active[s] is None or s in self._pf:
                 continue
             pos = int(self._pos[s])
             if self.lazy and \
@@ -815,16 +1110,21 @@ class ServeEngine:
 
     # -------------------------------------------------------------- serve
     def step(self) -> int:
-        """Admit from the queue, grow/CoW paged reservations, then advance
-        EVERY active slot with one batched device call (no call at all if
-        the table is empty). Returns the number of tokens produced this
-        step (admission prefill tokens included) — the AsyncDriver's
-        streaming signal. Step timing lands in ``stats``: ``step_count``
-        and ``wall_time_s`` cover every call, and ``tokens_per_s_ewma``
-        smooths the produced-tokens rate (alpha 0.2) for the DP router's
-        latency-aware routing."""
+        """Advance the engine by one step. MIXED engines (the default on
+        the paged layout) run ONE token-slot program covering every
+        active slot's decode token plus prefill chunks inside the
+        ``chunk_tokens`` budget (:meth:`_step_mixed`); legacy engines
+        admit-with-synchronous-prefill then run the batched decode.
+        Returns the number of tokens produced this step — the
+        AsyncDriver's streaming signal. Step timing lands in ``stats``:
+        ``step_count`` and ``wall_time_s`` cover every call, and
+        ``tokens_per_s_ewma`` smooths the produced-tokens rate (alpha
+        0.2) for the DP router's latency-aware routing."""
+        if self.mixed:
+            return self._step_mixed()
         t0 = time.perf_counter()
         before = self.stats["decode_tokens"]
+        self._expire_queued(time.monotonic())
         self._admit()
         if self.paged and (self.lazy or self._prefix is not None):
             self._grow_and_cow()
@@ -856,6 +1156,10 @@ class ServeEngine:
                 if len(req.out) >= req.max_new or hit_eos or \
                         self._pos[s] >= self.max_len:
                     self._retire(s)
+        return self._finish_step(t0, before)
+
+    def _finish_step(self, t0: float, before: int) -> int:
+        """Shared step epilogue: token count + timing telemetry."""
         produced = self.stats["decode_tokens"] - before
         dt = time.perf_counter() - t0
         self.stats["step_count"] += 1
@@ -866,6 +1170,145 @@ class ServeEngine:
             self.stats["tokens_per_s_ewma"] = \
                 rate if ewma <= 0 else 0.8 * ewma + 0.2 * rate
         return produced
+
+    def _step_mixed(self) -> int:
+        """One MIXED token-slot step (the tentpole refactor): expire
+        overdue queued requests, admit into free slots (pages only — no
+        synchronous prefill), then fill the ``chunk_tokens`` budget with
+        every decoding slot's next token FIRST and prefill chunks of
+        mid-prefill slots after (scheduler's ``prefill_key`` order,
+        nearest deadline first), and run the whole batch as ONE device
+        program. A slot's first token is sampled on the chunk containing
+        its final prompt position; admission runs again at the END so a
+        request finishing at admission frees its slot for the same-step
+        queue (matching the legacy path's same-step admission cadence).
+        """
+        t0 = time.perf_counter()
+        before = self.stats["decode_tokens"]
+        abort = self.abort_event
+        if abort is not None and abort.is_set():
+            # chunk-boundary cancellation (watchdog): skip launching this
+            # step's program entirely — control returns to the driver at
+            # sub-step latency and recovery requeues the slots
+            return self._finish_step(t0, before)
+        self._expire_queued(time.monotonic())
+        self._admit_mixed()
+        if self.lazy or self._prefix is not None:
+            self._grow_and_cow()
+        # clear satisfied dependencies: the donor finished its prefill
+        # (left _pf with full coverage) or its cursor passed the needed
+        # point; a donor preempted EARLIER already cascaded (see
+        # _preempt), so absence means satisfied
+        for st in self._pf.values():
+            if st["dep"] is not None:
+                d, needed = st["dep"]
+                dst = self._pf.get(d)
+                if dst is None or dst["cursor"] >= needed:
+                    st["dep"] = None
+        decode_slots = [s for s in range(self.slots)
+                        if self.active[s] is not None and s not in self._pf]
+        pkey = getattr(self._sched, "prefill_key", None)
+        items = sorted(
+            self._pf.items(),
+            key=lambda kv: ((pkey(self.active[kv[0]])
+                             if pkey is not None else ()), kv[1]["seq"]))
+        allot = pack_token_budget(
+            self.chunk_tokens, len(decode_slots),
+            [{"slot": s, "cursor": st["cursor"], "n": st["n"],
+              "dep": st["dep"]} for s, st in items])
+        if not decode_slots and not allot:
+            self._admit_mixed()
+            return self._finish_step(t0, before)
+        T = self.chunk_tokens
+        tokens = np.zeros((T, 1), np.int32)
+        pos = np.zeros(T, np.int32)
+        slot_v = np.zeros(T, np.int32)
+        active = np.zeros(T, bool)
+        wnull = np.ones(T, bool)      # pads write to the null page
+        r = 0
+        for s in decode_slots:
+            tokens[r, 0] = self._last[s]
+            pos[r] = self._pos[s]
+            slot_v[r] = s
+            active[r] = True
+            wnull[r] = False
+            r += 1
+        emit_row: Dict[int, int] = {}
+        for s, start, count in allot:
+            st = self._pf[s]
+            ctx, cov, last = st["ctx"], st["covered"], st["n"] - 1
+            for p in range(start, start + count):
+                tokens[r, 0] = ctx[p]
+                pos[r] = p
+                slot_v[r] = s
+                wnull[r] = p < cov
+                if p == last:
+                    active[r] = True
+                    emit_row[s] = r
+                r += 1
+        if abort is not None and abort.is_set():
+            # the watchdog fired while admission/encode/grow ran: yield
+            # at this chunk boundary instead of launching the program
+            return self._finish_step(t0, before)
+        self._sync_ptab()
+        with self._ctx():
+            tok, self._cache = self._mixed(
+                self.params, self._cache, self._dev(tokens),
+                self._dev(pos), self._dev(slot_v), self._dev(active),
+                self._dev(wnull), self._next_rng())
+        toks = np.asarray(tok)
+        if decode_slots:
+            self.stats["decode_steps"] += 1
+        for r, s in enumerate(decode_slots):
+            req = self.active[s]
+            t = int(toks[r])
+            req.out.append(t)
+            self._pos[s] += 1
+            self._last[s] = t
+            self.stats["decode_tokens"] += 1
+            if self._prefix is not None and \
+                    self._pos[s] % self.page_size == 0:
+                self._register_decode_block(s, req)
+            hit_eos = self.eos_id is not None and t == self.eos_id
+            if len(req.out) >= req.max_new or hit_eos or \
+                    self._pos[s] >= self.max_len:
+                self._retire(s)
+        ps = self.page_size
+        for s, start, count in allot:
+            st = self._pf[s]
+            st["cursor"] = start + count
+            self.stats["prefill_chunk_tokens"] += count
+            if self._prefix is not None:
+                # progressive registration: only blocks the cursor has
+                # fully passed — a later request (or a preemption
+                # cascade) must never adopt an unwritten block
+                aligned = st["cursor"] // ps * ps
+                if aligned > 0:
+                    self._prefix.insert(st["ctx"][:aligned],
+                                        self._alloc.pages_of(s),
+                                        salt=st["salt"])
+            if st["cursor"] > st["n"] - 1:
+                # final chunk ran the last prompt position: emit the
+                # first token and flip the slot to decoding
+                del self._pf[s]
+                req = self.active[s]
+                t = int(toks[emit_row[s]])
+                self.stats["prefills"] += 1
+                self.stats["decode_tokens"] += 1
+                req.out.append(t)
+                if req.first_tok_t is None:
+                    req.first_tok_t = time.monotonic()
+                self._pos[s] = st["n"]
+                self._last[s] = t
+                hit_eos = self.eos_id is not None and t == self.eos_id
+                if len(req.out) >= req.max_new or hit_eos or \
+                        st["n"] >= self.max_len:
+                    req.done = True
+                    self.finished[req.rid] = req
+                    self.active[s] = None
+                    self._release_pages(s)
+        self._admit_mixed()
+        return self._finish_step(t0, before)
 
     def _register_decode_block(self, s: int, req: Request):
         """DECODE-GENERATED prefix registration: slot ``s``'s cursor just
@@ -889,7 +1332,7 @@ class ServeEngine:
         property) and stay monotonic. Pool gauges restart from the
         current occupancy; the prefix cache's hit/miss counters restart
         from zero."""
-        keep = ("decode_traces", "prefill_traces")
+        keep = ("decode_traces", "prefill_traces", "encode_traces")
         for k, v in self.stats.items():
             if k not in keep:
                 self.stats[k] = 0.0 if isinstance(v, float) else 0

@@ -33,8 +33,19 @@ Metric glossary (the names ``GET /metrics`` exposes):
   ``serve_e2e_seconds``             summary   submit -> request completion
   ``serve_step_seconds``            summary   one engine step, wall time
   ``serve_step_occupancy``          summary   active slots entering a step
+  ``serve_prefill_chunk_tokens``    summary   prefill tokens one mixed step
+                                              processed as chunks (0 on
+                                              pure-decode steps; bounded by
+                                              the engine's ``chunk_tokens``
+                                              budget)
+  ``serve_step_prefill_fraction``   summary   prefill share of a mixed
+                                              step's work items —
+                                              chunk tokens over chunk
+                                              tokens + decode tokens
   ``serve_requests_submitted_total``  counter
   ``serve_requests_completed_total``  counter
+  ``serve_requests_expired_total``    counter deadline passed while queued
+                                              (done=False, expired=True)
   ``serve_tokens_streamed_total``     counter streamed tokens (all requests)
   ``serve_watchdog_fired_total``      counter stalled-step detections
   ``serve_watchdog_requeued_total``   counter requests requeued by recovery
@@ -281,10 +292,21 @@ class ServeMetrics:
         self.occupancy = r.histogram(
             "serve_step_occupancy",
             "Active slots entering each engine step", window=window)
+        self.prefill_chunk = r.histogram(
+            "serve_prefill_chunk_tokens",
+            "Prefill tokens processed as chunks by one mixed step",
+            window=window)
+        self.prefill_frac = r.histogram(
+            "serve_step_prefill_fraction",
+            "Prefill share of one mixed step's processed tokens",
+            window=window)
         self.submitted = r.counter(
             "serve_requests_submitted_total", "Requests accepted")
         self.completed = r.counter(
             "serve_requests_completed_total", "Requests completed")
+        self.expired = r.counter(
+            "serve_requests_expired_total",
+            "Requests whose deadline passed while still queued")
         self.tokens = r.counter(
             "serve_tokens_streamed_total", "Tokens streamed to requests")
         self.watchdog_fired = r.counter(

@@ -52,15 +52,37 @@ from typing import Deque, List, Optional, Sequence, Tuple
 
 
 class FifoLeastProgress:
-    """FIFO admission + least-progress preemption (the default policy)."""
+    """FIFO admission + least-progress preemption (the default policy).
+
+    Requests carrying a DEADLINE (``submit(..., deadline_s=)``, an
+    absolute monotonic time on ``Request.deadline``) jump the FIFO:
+    admission is earliest-deadline-first with submission order breaking
+    ties, and deadline-free requests sort as infinitely late — with no
+    deadlines anywhere this is exactly the old FIFO. ``prefill_key``
+    orders the mixed step's prefill-budget sharing the same way
+    (nearest deadline drains its prompt first)."""
 
     name = "fifo+least-progress"
 
+    @staticmethod
+    def _deadline(req) -> float:
+        d = getattr(req, "deadline", None)
+        return float("inf") if d is None else d
+
     def next_index(self, queue: Sequence) -> Optional[int]:
-        """Index into ``queue`` of the next admission candidate (FIFO:
-        always the head; None when empty). Head-of-line blocking is the
+        """Index into ``queue`` of the next admission candidate (EDF,
+        then FIFO; None when empty). Head-of-line blocking is the
         engine's contract: if this request cannot be placed, nothing is."""
-        return 0 if queue else None
+        if not queue:
+            return None
+        return min(range(len(queue)),
+                   key=lambda i: (self._deadline(queue[i]), i))
+
+    def prefill_key(self, req) -> Tuple:
+        """Sort key for sharing the mixed step's prefill token budget
+        between mid-prefill slots (ascending; ties broken by admission
+        order in the engine): nearest deadline first."""
+        return (self._deadline(req),)
 
     def pick_victim(self, candidates: List[Tuple[int, int, int]]) -> int:
         """Choose the slot to preempt from ``(slot, progress, priority)``
@@ -92,8 +114,13 @@ class Priority(FifoLeastProgress):
     def next_index(self, queue: Sequence) -> Optional[int]:
         if not queue:
             return None
-        return max(range(len(queue)),
-                   key=lambda i: (queue[i].priority, -i))
+        return min(range(len(queue)),
+                   key=lambda i: (-queue[i].priority,
+                                  self._deadline(queue[i]), i))
+
+    def prefill_key(self, req) -> Tuple:
+        """Priority class first, nearest deadline within it."""
+        return (-req.priority, self._deadline(req))
 
     def pick_victim(self, candidates: List[Tuple[int, int, int]]) -> int:
         if not candidates:

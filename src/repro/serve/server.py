@@ -3,14 +3,18 @@
 Three endpoints, no dependencies beyond ``http.server``:
 
   * ``POST /generate`` — body ``{"prompt": [ids...], "max_new": N,
-    "stream": bool, "priority": int}``. Non-streaming returns one JSON
-    object ``{"rid", "tokens", "done"}`` when the request completes;
-    ``"stream": true`` switches to chunked transfer encoding and writes
-    one JSON line PER TOKEN as the engine produces it
-    (``{"rid", "token", "index"}``), closing with
-    ``{"rid", "done": true, "tokens": [...]}`` — TTFT is the wire gap
-    before the first line. Validation failures (empty prompt, pool
-    bounds, bad JSON) are HTTP 400 with the engine's message.
+    "stream": bool, "priority": int, "deadline_s": float}``.
+    Non-streaming returns one JSON object ``{"rid", "tokens", "done",
+    "expired"}`` when the request completes; ``"stream": true``
+    switches to chunked transfer encoding and writes one JSON line PER
+    TOKEN as the engine produces it (``{"rid", "token", "index"}``),
+    closing with ``{"rid", "done": true, "expired": false,
+    "tokens": [...]}`` — TTFT is the wire gap before the first line.
+    ``deadline_s`` is a relative SLO: a request still QUEUED when it
+    elapses is dropped (``done=false, expired=true``, no tokens) instead
+    of occupying a slot it can no longer use. Validation failures
+    (empty prompt, pool bounds, bad JSON) are HTTP 400 with the
+    engine's message.
   * ``GET /metrics`` — Prometheus text exposition: the driver's
     TTFT/TPOT/step summaries plus every numeric ``engine.stats`` field
     as ``serve_engine_*`` gauges (serve/metrics.py documents the
@@ -111,9 +115,12 @@ def _make_handler(driver: AsyncDriver):
                 if not isinstance(prompt, list) or \
                         not all(isinstance(t, int) for t in prompt):
                     raise ValueError("prompt must be a list of token ids")
+                deadline_s = spec.get("deadline_s")
                 stream = driver.submit(
                     prompt, int(spec.get("max_new", 16)),
-                    priority=int(spec.get("priority", 0)))
+                    priority=int(spec.get("priority", 0)),
+                    deadline_s=(None if deadline_s is None
+                                else float(deadline_s)))
             except (KeyError, ValueError, TypeError,
                     json.JSONDecodeError) as e:
                 self._send_json({"error": str(e)}, 400)
@@ -127,9 +134,11 @@ def _make_handler(driver: AsyncDriver):
                     self._send_json({"error": str(e),
                                      "rid": stream.rid}, 504)
                     return
-                self._send_json({"rid": stream.rid,
-                                 "tokens": list(rec.out),
-                                 "done": bool(rec.done)})
+                self._send_json({
+                    "rid": stream.rid,
+                    "tokens": list(rec.out),
+                    "done": bool(rec.done),
+                    "expired": bool(getattr(rec, "expired", False))})
 
         def _stream_response(self, stream):
             """Chunked transfer: one JSON line per token, then the
@@ -149,6 +158,7 @@ def _make_handler(driver: AsyncDriver):
                 rec = stream.result(timeout=0.0)
                 self._chunk((json.dumps(
                     {"rid": stream.rid, "done": bool(rec.done),
+                     "expired": bool(getattr(rec, "expired", False)),
                      "tokens": list(rec.out)}) + "\n").encode())
                 self.wfile.write(b"0\r\n\r\n")
             except (BrokenPipeError, ConnectionResetError):

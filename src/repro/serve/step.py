@@ -48,6 +48,50 @@ def page_bucket(n_blocks: int, *, cap: int) -> int:
     return min(cap, 1 << (n_blocks - 1).bit_length())
 
 
+def pack_token_budget(budget: int, n_decode: int, prefill_items):
+    """Fill one mixed step's token budget: decode first, then prefill
+    chunks in the given order (the scheduler's priority order).
+
+    ``prefill_items`` are dicts with ``slot``, ``cursor`` (prompt tokens
+    already prefilled), ``n`` (total prompt tokens) and optional ``dep``
+    — a ``(donor_slot, needed_tokens)`` pair meaning this item adopted
+    the donor's shared pages up to ``needed_tokens`` and must not run a
+    chunk until the donor's PLANNED coverage (its cursor after this
+    step's allotments) reaches that point; same-step coverage counts
+    because the mixed program scatters every chunk's KV before any token
+    attends (serve/engine._mixed_fn).
+
+    Returns ``[(slot, start, count), ...]`` with ``count >= 1``,
+    ``sum(count) <= budget - n_decode``. Decode tokens are reserved
+    FIRST — prefill never displaces a decode slot — and a step whose
+    decode demand alone exceeds the budget is a sizing bug, so it
+    raises. Pure host logic; the hypothesis suite in
+    tests/test_serve_mixed.py drives it across random mixes.
+    """
+    if n_decode > budget:
+        raise ValueError(
+            f"decode demand {n_decode} exceeds the token budget {budget}; "
+            "chunk_tokens must be >= the slot count")
+    left = budget - n_decode
+    planned_end = {it["slot"]: it["cursor"] for it in prefill_items}
+    allot = []
+    for it in prefill_items:
+        if left <= 0:
+            break
+        dep = it.get("dep")
+        if dep is not None:
+            donor, needed = dep
+            if planned_end.get(donor, needed) < needed:
+                continue
+        take = min(left, it["n"] - it["cursor"])
+        if take <= 0:
+            continue
+        allot.append((it["slot"], it["cursor"], take))
+        planned_end[it["slot"]] = it["cursor"] + take
+        left -= take
+    return allot
+
+
 def scatter_prefill_pages(pool, kvs, pages, page_size: int):
     """Write a freshly-prefilled per-request KV into its pool pages.
 

@@ -77,18 +77,25 @@ def test_engine_matches_sequential_greedy_one_trace(paged):
 
 
 def test_engine_one_decode_call_per_step():
-    """One engine step() == exactly one batched decode dispatch, whether 1
-    or all slots are occupied."""
+    """One engine step() == exactly one device dispatch, whether 1 or all
+    slots are occupied. The default mixed step folds admission prefill
+    chunks into the SAME program, so an admission-only step counts no
+    decode_steps and prefill never traces a separate program."""
     params = _params(CFG)
     eng = ServeEngine(CFG, params, slots=4, max_len=64)
     eng.submit(0, np.arange(5, dtype=np.int32), max_new=8)   # 1 of 4 slots
+    eng.step()                       # admission: prefill chunk, no decode
+    assert eng.stats["decode_steps"] == 0
     eng.step()
     assert eng.stats["decode_steps"] == 1
     for i in range(1, 4):
         eng.submit(i, np.arange(4 + i, dtype=np.int32), max_new=8)
-    eng.step()                                               # 4 of 4 slots
+    eng.step()                       # 1 decode slot + 3 admission chunks
     assert eng.stats["decode_steps"] == 2
+    eng.step()                                               # 4 of 4 slots
+    assert eng.stats["decode_steps"] == 3
     assert eng.stats["decode_traces"] == 1
+    assert eng.stats["prefill_traces"] == 0
 
 
 def test_engine_ssm_matches_sequential():
@@ -266,7 +273,10 @@ def test_run_returns_partials_on_max_steps(paged):
     results = eng.run(max_steps=3)
     assert set(results) == {0, 1}
     assert not results[0].done
-    assert len(results[0].out) == 4      # prefill token + 3 decode steps
+    # dense/legacy: prefill + first token before step 1, then 3 decode
+    # steps; mixed (paged default): step 1 IS the prefill chunk + first
+    # token, steps 2-3 decode
+    assert len(results[0].out) == (3 if paged else 4)
     assert not results[1].done
     assert results[1].out == []          # never admitted
     # the engine can resume: a later run() finishes both

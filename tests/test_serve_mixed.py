@@ -1,0 +1,530 @@
+"""Unified mixed token-slot step (serve/engine.py + serve/step.py):
+
+every engine step runs ONE program over a ``chunk_tokens`` token budget
+shared between decoding slots and the prefill CHUNKS of newly admitted
+requests. The contract pinned here:
+
+  * greedy outputs are BIT-IDENTICAL to the legacy split prefill/decode
+    path — dense (multi-slot), MoE (no-drop capacity), enc-dec (frames),
+    prefix-cache + lazy growth, and the tp2/dp2 sharded backends;
+  * a long prompt's prefill spans steps WITHOUT stalling co-resident
+    decode (the short request gains a token every step);
+  * trace count is bounded by (token-budget, page-bucket) shapes, not by
+    prompt length — prefill_traces stays 0;
+  * ``submit(..., deadline_s=)``: EDF admission, nearest-deadline
+    prefill-budget priority, queued-only expiry (done=False,
+    expired=True);
+  * the watchdog's ``driver.abort_step`` is polled at chunk boundaries
+    (``engine.abort_event``) so recovery lands in sub-step latency;
+  * TTFT is stamped when the FIRST token is appended, so a request that
+    finishes at admission still gets a real first-token time;
+  * ``pack_token_budget`` accounting (hypothesis): every prompt token is
+    allotted exactly once, no step exceeds the budget, decode is never
+    displaced, dependents never run ahead of their donor's coverage.
+"""
+import threading
+import time
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs.base import ModelConfig
+from repro.models import get_model
+from repro.serve.driver import AsyncDriver
+from repro.serve.engine import ServeEngine
+from repro.serve.parallel import ReplicaRouter, replica_meshes
+from repro.serve.step import pack_token_budget
+
+CFG = ModelConfig(name="mixed-dense", arch_type="dense", num_layers=2,
+                  d_model=64, num_heads=4, num_kv_heads=2, d_ff=128,
+                  vocab_size=128, dtype="float32")
+
+# capacity_factor = E / k: the per-expert buffer holds every token even
+# if the router sends ALL of them to the same expert, so no-drop dispatch
+# (the mixed/split bit-identity regime) holds at any step width
+MOE_CFG = ModelConfig(name="mixed-moe", arch_type="moe", num_layers=2,
+                      d_model=64, num_heads=4, num_kv_heads=2, d_ff=128,
+                      num_experts=4, experts_per_token=2,
+                      moe_capacity_factor=2.0, vocab_size=128,
+                      dtype="float32")
+
+AUDIO_CFG = ModelConfig(name="mixed-encdec", arch_type="audio",
+                        num_layers=2, d_model=64, num_heads=4,
+                        num_kv_heads=4, d_ff=128, vocab_size=128,
+                        encoder_layers=1, encoder_ctx=12, dtype="float32")
+
+
+def _params(cfg, seed=0):
+    return get_model(cfg).init(jax.random.key(seed), cfg)
+
+
+def _prompts(rng, cfg, lens):
+    return [rng.integers(0, cfg.vocab_size, size=(int(n),)).astype(np.int32)
+            for n in lens]
+
+
+def _serve(cfg, params, prompts, new, *, mixed, frames=None, mesh=None,
+           **kw):
+    kw.setdefault("slots", 2)
+    kw.setdefault("max_len", 64)
+    if mixed:
+        kw.setdefault("chunk_tokens", 16)   # force multi-step prefill
+    eng = ServeEngine(cfg, params, mesh=mesh, paged=True, mixed=mixed,
+                      **kw)
+    for i, p in enumerate(prompts):
+        eng.submit(i, p, max_new=new,
+                   frames=None if frames is None else frames[i])
+    results = eng.run()
+    return {i: list(results[i].out) for i in results}, eng
+
+
+# ----------------------------------------------------- greedy bit-identity
+
+def test_mixed_matches_split_dense_multislot():
+    """Long + short prompts across 2 slots: the chunked mixed path emits
+    exactly the legacy split path's greedy tokens."""
+    params = _params(CFG)
+    prompts = _prompts(np.random.default_rng(0), CFG, (5, 23, 9, 40, 6))
+    split, se = _serve(CFG, params, prompts, 6, mixed=False)
+    mixed, me = _serve(CFG, params, prompts, 6, mixed=True)
+    assert mixed == split
+    assert me.stats["prefill_traces"] == 0
+    assert me.stats["prefill_chunk_tokens"] == sum(len(p) for p in prompts)
+    assert se.stats["prefill_traces"] >= 1
+
+
+def test_mixed_matches_split_moe():
+    """No-drop MoE capacity makes expert dispatch row-independent, so the
+    mixed step width cannot perturb routing: bit-identical outputs."""
+    params = _params(MOE_CFG, seed=5)
+    prompts = _prompts(np.random.default_rng(5), MOE_CFG, (5, 19, 8, 27))
+    split, _ = _serve(MOE_CFG, params, prompts, 5, mixed=False)
+    mixed, _ = _serve(MOE_CFG, params, prompts, 5, mixed=True)
+    assert mixed == split
+
+
+def test_mixed_matches_split_encdec():
+    """Enc-dec: the encoder runs once per admission as its own program
+    (encode_traces), cross-KV lands per-slot, and chunked decoder prefill
+    stays bit-identical to the split path."""
+    params = _params(AUDIO_CFG, seed=2)
+    rng = np.random.default_rng(2)
+    prompts = _prompts(rng, AUDIO_CFG, (4, 17, 5, 11))
+    frames = [rng.standard_normal(
+        (AUDIO_CFG.encoder_ctx, AUDIO_CFG.d_model)).astype(np.float32)
+        for _ in prompts]
+    split, _ = _serve(AUDIO_CFG, params, prompts, 5, mixed=False,
+                      frames=frames, max_len=32)
+    mixed, me = _serve(AUDIO_CFG, params, prompts, 5, mixed=True,
+                       frames=frames, max_len=32)
+    assert mixed == split
+    assert me.stats["encode_traces"] == 1
+    assert me.stats["prefill_traces"] == 0
+
+
+def test_mixed_matches_split_prefix_cache_lazy():
+    """Shared system prompt + lazy growth + preemption pressure under the
+    mixed step: donor/dependent chunked prefill over CoW pages is exact."""
+    params = _params(CFG)
+    rng = np.random.default_rng(3)
+    system = rng.integers(0, CFG.vocab_size, size=(33,)).astype(np.int32)
+    prompts = [np.concatenate(
+        [system, rng.integers(0, CFG.vocab_size, size=(int(n),))])
+        .astype(np.int32) for n in (5, 9, 3, 14)]
+    kw = dict(slots=4, prefix_cache=True, lazy=True)
+    split, se = _serve(CFG, params, prompts, 5, mixed=False, **kw)
+    mixed, me = _serve(CFG, params, prompts, 5, mixed=True, **kw)
+    assert mixed == split
+    # sharing still collapses the system prompt to one physical copy
+    assert me.stats["prefix_hit_blocks"] >= se.stats["prefix_hit_blocks"]
+
+
+def test_mixed_matches_split_tp2_dp2():
+    """The sharded backends run the same mixed program: tp2 (head-sharded
+    pool) and dp2 (replica router) both match the unsharded split path."""
+    params = _params(CFG)
+    prompts = _prompts(np.random.default_rng(7), CFG, (5, 29, 9, 44))
+    split, _ = _serve(CFG, params, prompts, 6, mixed=False)
+    [mesh] = replica_meshes(1, 2)
+    tp2, te = _serve(CFG, params, prompts, 6, mixed=True, mesh=mesh)
+    assert tp2 == split
+    assert te.stats["prefill_traces"] == 0 and \
+        te.stats["decode_traces"] >= 1
+    router = ReplicaRouter(CFG, params, dp=2, slots=2, max_len=64,
+                           paged=True, mixed=True, chunk_tokens=16)
+    for i, p in enumerate(prompts):
+        router.submit(i, p, max_new=6)
+    res = router.run()
+    assert {i: list(res[i].out) for i in res} == split
+
+
+# --------------------------------------------------- chunked-prefill cadence
+
+def test_long_prefill_never_stalls_decode():
+    """With the budget nearly consumed by a LONG admission, the already-
+    decoding short request still gains exactly one token EVERY step —
+    chunked prefill shares the step instead of monopolizing it."""
+    params = _params(CFG)
+    rng = np.random.default_rng(11)
+    short = rng.integers(0, CFG.vocab_size, size=(4,)).astype(np.int32)
+    long = rng.integers(0, CFG.vocab_size, size=(40,)).astype(np.int32)
+    eng = ServeEngine(CFG, params, slots=2, max_len=64, paged=True,
+                      mixed=True, chunk_tokens=8)
+    eng.submit(0, short, max_new=12)
+    eng.step()                                   # admit + prefill short
+    eng.submit(1, long, max_new=4)
+    chunk_steps = 0
+    for _ in range(40):
+        req0 = eng.active[0] if eng.active[0] is not None \
+            else eng.finished.get(0)
+        before = len(req0.out) if req0 is not None else None
+        pf_before = eng.stats["prefill_chunk_tokens"]
+        eng.step()
+        if eng.stats["prefill_chunk_tokens"] > pf_before:
+            chunk_steps += 1
+            # the long prompt's chunk ran AND the short slot still decoded
+            if before is not None and eng.active[0] is not None:
+                assert len(eng.active[0].out) == before + 1
+        if not eng.busy():
+            break
+    # 40 prompt tokens through a budget of 8 (minus 1 decode token):
+    # prefill must have spanned several steps
+    assert chunk_steps >= 5
+    res = eng.run()
+    assert res[0].done and res[1].done
+    # parity against the split path for the same interleaving-free batch
+    eng2 = ServeEngine(CFG, params, slots=2, max_len=64, paged=True,
+                      mixed=False)
+    eng2.submit(0, short, max_new=12)
+    eng2.submit(1, long, max_new=4)
+    res2 = eng2.run()
+    assert list(res[0].out) == list(res2[0].out)
+    assert list(res[1].out) == list(res2[1].out)
+
+
+def test_trace_count_bounded_by_shape_not_prompt_length():
+    """Many distinct prompt lengths, ONE token-budget shape: the mixed
+    path's program count is bounded by page-bucket crossings (<= 3 on
+    this pool) where the split path retraces prefill per bucket."""
+    params = _params(CFG)
+    prompts = _prompts(np.random.default_rng(13), CFG,
+                       (4, 6, 9, 12, 17, 21, 26, 33, 40, 47))
+    mixed, me = _serve(CFG, params, prompts, 4, mixed=True, slots=3)
+    assert me.stats["prefill_traces"] == 0
+    assert me.stats["decode_traces"] <= 3
+    split, se = _serve(CFG, params, prompts, 4, mixed=False, slots=3)
+    assert se.stats["prefill_traces"] >= 3      # one per prefill bucket
+    assert mixed == split
+
+
+# ------------------------------------------------------------ construction
+
+def test_chunk_tokens_must_cover_slots():
+    params = _params(CFG)
+    with pytest.raises(ValueError, match="chunk_tokens"):
+        ServeEngine(CFG, params, slots=8, max_len=64, paged=True,
+                    mixed=True, chunk_tokens=4)
+
+
+def test_mixed_requires_paged_layout():
+    params = _params(CFG)
+    with pytest.raises(ValueError, match="paged"):
+        ServeEngine(CFG, params, slots=2, max_len=64, paged=False,
+                    mixed=True)
+    # dense default: mixed quietly stays off
+    eng = ServeEngine(CFG, params, slots=2, max_len=64, paged=False)
+    assert eng.mixed is False
+
+
+# --------------------------------------------------------------- deadlines
+
+def test_deadline_edf_jumps_fifo():
+    """A queued deadline request admits before earlier deadline-free
+    submissions (EDF), and FIFO order still breaks ties."""
+    params = _params(CFG)
+    prompts = _prompts(np.random.default_rng(17), CFG, (5, 6, 7))
+    eng = ServeEngine(CFG, params, slots=1, max_len=64, paged=True,
+                      mixed=True, chunk_tokens=8)
+    eng.submit(0, prompts[0], max_new=2)
+    eng.submit(1, prompts[1], max_new=2)
+    eng.submit(2, prompts[2], max_new=2, deadline_s=30.0)
+    order = []
+    for _ in range(300):
+        eng.step()
+        for rid in eng.finished:
+            if rid not in order:
+                order.append(rid)
+        if not eng.busy():
+            break
+    assert order == [2, 0, 1]
+
+
+def test_deadline_expired_while_queued():
+    """A request whose deadline passes while it is still QUEUED finishes
+    done=False, expired=True with no tokens; active requests never
+    expire."""
+    params = _params(CFG)
+    prompts = _prompts(np.random.default_rng(19), CFG, (30, 6))
+    eng = ServeEngine(CFG, params, slots=1, max_len=64, paged=True,
+                      mixed=True, chunk_tokens=8)
+    eng.submit(0, prompts[0], max_new=8, deadline_s=60.0)  # gets the slot
+    eng.submit(1, prompts[1], max_new=4, deadline_s=0.001)
+    time.sleep(0.05)
+    res = eng.run()
+    assert res[0].done and not res[0].expired and len(res[0].out) == 8
+    assert res[1].expired and not res[1].done and res[1].out == []
+    assert eng.stats["expired"] == 1
+
+
+def test_deadline_submit_validation():
+    params = _params(CFG)
+    eng = ServeEngine(CFG, params, slots=1, max_len=64, paged=True)
+    with pytest.raises(ValueError, match="deadline"):
+        eng.submit(0, np.arange(4, dtype=np.int32), max_new=2,
+                   deadline_s=0.0)
+
+
+def test_nearest_deadline_gets_prefill_budget_first():
+    """Two long prompts admitted together: the tight budget drains the
+    NEARER deadline's prompt first, so it emits its first token first."""
+    params = _params(CFG)
+    rng = np.random.default_rng(23)
+    prompts = _prompts(rng, CFG, (32, 32))
+    eng = ServeEngine(CFG, params, slots=2, max_len=64, paged=True,
+                      mixed=True, chunk_tokens=8)
+    eng.submit(0, prompts[0], max_new=3)                  # no deadline
+    eng.submit(1, prompts[1], max_new=3, deadline_s=60.0)
+    first = {}
+    for step in range(300):
+        eng.step()
+        for s in range(eng.slots):
+            req = eng.active[s]
+            if req is not None and req.out and req.rid not in first:
+                first[req.rid] = step
+        for rid, req in eng.finished.items():
+            if req.out and rid not in first:
+                first[rid] = step
+        if not eng.busy():
+            break
+    assert first[1] < first[0], first
+
+
+# ------------------------------------------------- watchdog chunk boundary
+
+def test_abort_event_yields_at_chunk_boundary():
+    """With ``engine.abort_event`` set, a mixed step returns WITHOUT
+    launching a program or advancing any prefill cursor — the sub-step
+    cancellation point the watchdog's recovery relies on — and stepping
+    resumes cleanly once it clears."""
+    params = _params(CFG)
+    prompts = _prompts(np.random.default_rng(29), CFG, (40,))
+    eng = ServeEngine(CFG, params, slots=1, max_len=64, paged=True,
+                      mixed=True, chunk_tokens=8)
+    eng.submit(0, prompts[0], max_new=4)
+    eng.step()                                   # first prefill chunk
+    pf = eng.stats["prefill_chunk_tokens"]
+    assert pf > 0
+    ev = threading.Event()
+    eng.abort_event = ev
+    ev.set()
+    eng.step()                                   # aborted: no work
+    assert eng.stats["prefill_chunk_tokens"] == pf
+    assert eng.stats["decode_tokens"] == 0
+    ev.clear()
+    res = eng.run()
+    assert res[0].done and len(res[0].out) == 4
+
+
+def test_driver_wires_abort_event_and_recovers_mid_prefill():
+    """AsyncDriver hands its ``abort_step`` to every mixed engine at
+    construction; an injected stall while a LONG prompt is mid-prefill
+    fires the watchdog, the chunk-boundary poll yields in sub-stall
+    latency, and the requeued request still completes with parity."""
+    params = _params(CFG)
+    rng = np.random.default_rng(31)
+    prompt = rng.integers(0, CFG.vocab_size, size=(40,)).astype(np.int32)
+    base, _ = _serve(CFG, params, [prompt], 6, mixed=False, slots=1)
+    eng = ServeEngine(CFG, params, slots=1, max_len=64, paged=True,
+                      mixed=True, chunk_tokens=8)
+    eng.submit(100, prompt[:6], max_new=2)       # warm the program
+    eng.run()
+
+    calls = {"n": 0}
+    yielded = {"dt": None}
+
+    def step_fn(drv):
+        calls["n"] += 1
+        if calls["n"] == 3:                      # rid 0 is mid-prefill
+            t0 = time.monotonic()
+            # a stalled chunk loop: poll the SAME event the engine polls
+            # at every chunk boundary, never longer than one chunk apart
+            while not drv.abort_step.is_set() and \
+                    time.monotonic() - t0 < 20.0:
+                time.sleep(0.02)
+            yielded["dt"] = time.monotonic() - t0
+            return
+        drv.engine.step()
+
+    drv = AsyncDriver(eng, watchdog_timeout=0.25, step_fn=step_fn,
+                      start=False)
+    assert eng.abort_event is drv.abort_step
+    stream = drv.submit(prompt, max_new=6, rid=0)
+    drv.start()
+    rec = stream.result(timeout=60.0)
+    drv.stop(drain=True)
+    assert rec.done and list(rec.out) == base[0]
+    assert drv.metrics.watchdog_fired.value >= 1
+    assert eng.stats["preemptions"] >= 1
+    # sub-step recovery: the stalled "chunk" yielded within ~a timeout,
+    # nowhere near the 20s a full uncancellable step would cost
+    assert yielded["dt"] is not None and yielded["dt"] < 5.0
+    assert not drv.abort_step.is_set()
+
+
+# ------------------------------------------------------------------- TTFT
+
+def test_ttft_stamped_for_finish_at_admission():
+    """A request that completes in its admission step (max_new=1) still
+    records a real first-token time: TTFT comes from the token-append
+    stamp, not from whenever the drain loop notices completion."""
+    params = _params(CFG)
+    prompt = np.arange(5, dtype=np.int32)
+    eng = ServeEngine(CFG, params, slots=1, max_len=64, paged=True,
+                      mixed=True, chunk_tokens=8)
+    drv = AsyncDriver(eng, start=False)
+    stream = drv.submit(prompt, max_new=1)
+    drv.start()
+    rec = stream.result(timeout=60.0)
+    drv.stop(drain=False)
+    assert rec.done and len(rec.out) == 1
+    assert rec.first_tok_t is not None
+    assert drv.metrics.ttft.count == 1
+    [p50] = drv.metrics.ttft.quantiles([0.5])
+    assert 0.0 <= p50 < 60.0
+    assert stream.first_token_s is not None
+
+
+# ----------------------------------------------- token-budget accounting
+
+def test_pack_token_budget_rejects_oversubscribed_decode():
+    with pytest.raises(ValueError, match="token budget"):
+        pack_token_budget(4, 5, [])
+
+
+# hypothesis comes from the [test] extra; a bare env falls back to a
+# fixed seed sweep of the same generator so the module stays green
+try:
+    from hypothesis import given, settings, strategies as hst
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+
+def _random_case(rng):
+    """One random budget-accounting case (mirrors the hypothesis
+    strategy, driven by numpy when hypothesis is absent)."""
+    budget = int(rng.integers(1, 65))
+    n_decode = int(rng.integers(0, budget))
+    items = []
+    for i in range(int(rng.integers(0, 7))):
+        n = int(rng.integers(1, 61))
+        cursor = int(rng.integers(0, n))
+        dep = None
+        if items and rng.random() < 0.5:
+            donor = int(rng.integers(0, len(items)))
+            dep = (donor, int(rng.integers(1, items[donor]["n"] + 1)))
+        items.append({"slot": i, "cursor": cursor, "n": n, "dep": dep})
+    return budget, n_decode, items
+
+
+def _check_single_step(case):
+    """One pack call: decode reserved first, contiguous per-slot chunks,
+    dependents never scheduled ahead of their donor's planned coverage."""
+    budget, n_decode, items = case
+    allot = pack_token_budget(budget, n_decode,
+                              [dict(it) for it in items])
+    by_slot = {}
+    for s, start, count in allot:
+        assert count >= 1
+        assert s not in by_slot               # one chunk per slot per step
+        by_slot[s] = (start, count)
+    # decode reserved first: prefill never displaces a decode token
+    assert sum(c for _, _, c in allot) <= budget - n_decode
+    planned = {it["slot"]: it["cursor"] for it in items}
+    for it in items:
+        if it["slot"] in by_slot:
+            start, count = by_slot[it["slot"]]
+            assert start == it["cursor"]      # chunks are contiguous
+            assert start + count <= it["n"]
+            if it["dep"] is not None:
+                donor, needed = it["dep"]
+                assert planned.get(donor, needed) >= needed
+            planned[it["slot"]] = start + count
+
+
+def _check_drains_exactly_once(case):
+    """Driving pack_token_budget to completion allots every remaining
+    prompt position exactly once, never exceeding the budget per step.
+    Completed donors drop out of the item list, which unblocks their
+    dependents exactly as the engine's dep-clearing pass does."""
+    budget, n_decode, items = case
+    seen = {it["slot"]: set() for it in items}
+    remaining = [dict(it) for it in items]
+    for _ in range(10_000):
+        live = [it for it in remaining if it["cursor"] < it["n"]]
+        if not live:
+            break
+        allot = pack_token_budget(budget, n_decode, live)
+        assert sum(c for _, _, c in allot) <= budget - n_decode
+        by_slot = {s: (start, count) for s, start, count in allot}
+        for it in live:
+            if it["slot"] in by_slot:
+                start, count = by_slot[it["slot"]]
+                assert start == it["cursor"]
+                positions = set(range(start, start + count))
+                assert not positions & seen[it["slot"]]   # exactly-once
+                seen[it["slot"]] |= positions
+                it["cursor"] += count
+    assert all(it["cursor"] == it["n"] for it in remaining)
+    for it in items:
+        assert seen[it["slot"]] == set(range(it["cursor"], it["n"]))
+
+
+if HAVE_HYPOTHESIS:
+    @hst.composite
+    def _budget_case(draw):
+        budget = draw(hst.integers(min_value=1, max_value=64))
+        n_decode = draw(hst.integers(min_value=0, max_value=budget - 1))
+        items = []
+        for i in range(draw(hst.integers(min_value=0, max_value=6))):
+            n = draw(hst.integers(min_value=1, max_value=60))
+            cursor = draw(hst.integers(min_value=0, max_value=n - 1))
+            dep = None
+            if items and draw(hst.booleans()):
+                donor = draw(hst.integers(min_value=0,
+                                          max_value=len(items) - 1))
+                dep = (donor, draw(hst.integers(
+                    min_value=1, max_value=items[donor]["n"])))
+            items.append({"slot": i, "cursor": cursor, "n": n, "dep": dep})
+        return budget, n_decode, items
+
+    @given(_budget_case())
+    @settings(max_examples=200, deadline=None)
+    def test_pack_token_budget_properties(case):
+        _check_single_step(case)
+
+    @given(_budget_case())
+    @settings(max_examples=100, deadline=None)
+    def test_pack_token_budget_drains_every_token_exactly_once(case):
+        _check_drains_exactly_once(case)
+else:
+    def test_pack_token_budget_properties():
+        rng = np.random.default_rng(0)
+        for _ in range(200):
+            _check_single_step(_random_case(rng))
+
+    def test_pack_token_budget_drains_every_token_exactly_once():
+        rng = np.random.default_rng(1)
+        for _ in range(100):
+            _check_drains_exactly_once(_random_case(rng))
