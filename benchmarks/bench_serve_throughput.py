@@ -46,6 +46,7 @@ if any(a.startswith(("--tp", "--dp", "--parallel-sweep"))
                           "--xla_force_host_platform_device_count=8")
 
 import argparse
+import hashlib
 import json
 import time
 
@@ -82,11 +83,12 @@ def bench(params, *, slots: int, n_requests: int, max_new: int,
           max_len: int = 64, seed: int = 0, paged: bool = False,
           page_size: int = 16, kv_pages=None, prefix_cache: bool = False,
           lazy: bool = False, tp: int = 1, dp: int = 1,
-          mixed=None, chunk_tokens=None, mixed_workload: bool = False
-          ) -> dict:
+          mixed=None, chunk_tokens=None, mixed_workload: bool = False,
+          attn_backend: str = "gather") -> dict:
     kw = dict(slots=slots, max_len=max_len, paged=paged,
               page_size=page_size, kv_pages=kv_pages,
-              prefix_cache=prefix_cache, lazy=lazy)
+              prefix_cache=prefix_cache, lazy=lazy,
+              attn_backend=attn_backend)
     if mixed is not None:
         kw["mixed"] = mixed
     if chunk_tokens is not None:
@@ -119,7 +121,13 @@ def bench(params, *, slots: int, n_requests: int, max_new: int,
     drv.join(timeout=600.0)
     dt = time.perf_counter() - t0
     drv.stop(drain=False)
-    toks = sum(len(s.result(timeout=0.0).out) for s in streams)
+    outs = {s.rid: list(s.result(timeout=0.0).out) for s in streams}
+    toks = sum(len(o) for o in outs.values())
+    # greedy-token fingerprint of the measured pass: rows from different
+    # backends (gather vs pallas) over the same workload must match it
+    # exactly — the CI paged-kernel-smoke identity check
+    digest = hashlib.sha1(json.dumps(
+        [outs[r] for r in sorted(outs)]).encode()).hexdigest()[:16]
     lat = drv.metrics.latency_summary()
     st = eng.stats
     # trace counters are a PER-REPLICA property: report the worst replica
@@ -141,6 +149,8 @@ def bench(params, *, slots: int, n_requests: int, max_new: int,
         "prefill_traces": max(r["prefill_traces"] for r in reps),
         "prefill_chunk_tokens": st.get("prefill_chunk_tokens", 0),
         "paged": rep0.paged,
+        "attn_backend": getattr(rep0, "attn_backend", "gather"),
+        "out_digest": digest,
         "peak_kv_bytes": eng.kv_bytes(),
         "per_device_peak_kv_bytes": eng.per_device_kv_bytes(),
         # request latency percentiles (seconds, from the driver metrics)
@@ -201,6 +211,13 @@ def main():
                          "with mixed stepping OFF then ON")
     ap.add_argument("--chunk-tokens", type=int, default=None,
                     help="mixed-step token budget (engine default 256)")
+    ap.add_argument("--attn-backend", choices=("gather", "pallas"),
+                    default="gather",
+                    help="paged-attention decode path (pallas = fused "
+                         "flash-decoding kernel, interpret mode on CPU; "
+                         "implies --paged); rows carry the backend and "
+                         "an out_digest column so gather-vs-pallas runs "
+                         "can be diffed for token identity")
     ap.add_argument("--json", type=str, default="",
                     help="write results to this path (default: stdout)")
     args = ap.parse_args()
@@ -226,9 +243,11 @@ def main():
     else:
         results = [bench(params, slots=s, n_requests=args.requests,
                          max_new=args.max_new, max_len=args.max_len,
-                         paged=args.paged or args.tp > 1 or args.dp > 1,
+                         paged=(args.paged or args.tp > 1 or args.dp > 1
+                                or args.attn_backend == "pallas"),
                          page_size=args.page_size, kv_pages=args.kv_pages,
-                         tp=args.tp, dp=args.dp)
+                         tp=args.tp, dp=args.dp,
+                         attn_backend=args.attn_backend)
                    for s in args.slots]
     report = {"config": TINY.name, "results": results}
     out = json.dumps(report, indent=2)

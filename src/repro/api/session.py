@@ -152,7 +152,7 @@ class Session:
               page_size: int = 16, kv_pages: Optional[int] = None,
               prefix_cache: bool = False, lazy: bool = False,
               scheduler=None, mixed: Optional[bool] = None,
-              chunk_tokens: int = 256):
+              chunk_tokens: int = 256, attn_backend: str = "gather"):
         """Continuous-batching engine over this session's params: one
         batched jitted decode advances the whole slot table per step.
         ``temperature > 0`` switches the on-device sampler from greedy to
@@ -209,7 +209,16 @@ class Session:
         ``mixed=False`` restores the legacy split prefill/decode path
         (bit-identical greedy outputs either way); ``chunk_tokens``
         (default 256, must be >= ``slots``) caps the per-step token
-        count and thereby the worst-case step latency."""
+        count and thereby the worst-case step latency.
+
+        Decode backend: ``attn_backend="pallas"`` switches the paged
+        decode attention from the XLA gather path to the fused
+        flash-decoding Pallas kernel (kernels/paged_attention.py — the
+        page table drives the pool lookup in-kernel, so gathered KV is
+        never materialized). Greedy outputs are token-identical, the
+        one-trace-per-bucket cadence is unchanged, and it composes with
+        ``tp`` (head-sharded pool stays head-local per device); on CPU
+        the kernel runs in interpret mode. Requires the paged layout."""
         p = plan if plan is not None else self.plan
         if tp is None or dp is None:
             if p is not None and p.degrees.pp > 1:
@@ -225,7 +234,8 @@ class Session:
                   seed=self.seed if seed is None else seed,
                   paged=paged, page_size=page_size, kv_pages=kv_pages,
                   prefix_cache=prefix_cache, lazy=lazy, scheduler=scheduler,
-                  mixed=mixed, chunk_tokens=chunk_tokens)
+                  mixed=mixed, chunk_tokens=chunk_tokens,
+                  attn_backend=attn_backend)
         if tp == 1 and dp == 1:
             return ServeEngine(self.cfg, self.params, **kw)
         # serve on the session's own device placement when its mesh IS the

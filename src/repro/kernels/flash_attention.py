@@ -8,7 +8,13 @@ the *sequential* kv grid dimension. Causality is handled per-block: fully
 masked blocks are skipped with ``pl.when`` (the compute saving the XLA
 "masked" baseline cannot express).
 
-Grid: (batch*heads, nq, nk) with nk innermost/sequential.
+GQA runs natively: query-head program ``bh`` reads KV row
+``q_head // rep`` through the BlockSpec index map, so grouped KV is never
+repeated to Hq width in HBM. Ragged sequence lengths are padded up to the
+block grid and the tail masked with the same kv-bound helper the paged
+decode kernel (kernels/paged_attention.py) uses for its last page.
+
+Grid: (batch*q_heads, nq, nk) with nk innermost/sequential.
 """
 from __future__ import annotations
 
@@ -22,9 +28,40 @@ from jax.experimental import pallas as pl
 NEG_INF = -1e30
 
 
+def tpu_compiler_params(**kw):
+    """Compat shim: jax renamed ``TPUCompilerParams`` to
+    ``CompilerParams`` across releases; kernels must load under both."""
+    from jax.experimental.pallas import tpu as pltpu
+    cls = getattr(pltpu, "CompilerParams", None) \
+        or getattr(pltpu, "TPUCompilerParams")
+    return cls(**kw)
+
+
+def pad_to_block(x, axis: int, block: int):
+    """Zero-pad ``x`` along ``axis`` up to the next multiple of
+    ``block`` (no-op when it already divides). The pad positions carry
+    garbage logits downstream, so every consumer must mask them with
+    :func:`kv_bound_mask` / slice them off the output."""
+    n = x.shape[axis]
+    extra = (-n) % block
+    if extra == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, extra)
+    return jnp.pad(x, widths)
+
+
+def kv_bound_mask(kpos, kv_len):
+    """True where a KV position is live: ``kpos < kv_len``. Shared
+    between the flash kernel's ragged-tail masking (``kv_len`` = the
+    real, pre-padding T) and the paged decode kernel's last-page /
+    null-page masking (``kv_len = pos + 1``)."""
+    return kpos < kv_len
+
+
 def _kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
             causal: bool, window: int, block_q: int, block_k: int,
-            nk: int, sm_scale: float):
+            nk: int, t_real: int, sm_scale: float):
     qi, ki = pl.program_id(1), pl.program_id(2)
 
     @pl.when(ki == 0)
@@ -35,10 +72,12 @@ def _kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
 
     q_start = qi * block_q
     k_start = ki * block_k
-    # block-level relevance: skip fully-masked (future / out-of-window) blocks
-    relevant = True
+    # block-level relevance: skip fully-masked (future / out-of-window /
+    # ragged-pad) blocks
+    relevant = k_start < t_real
     if causal:
-        relevant = k_start <= q_start + block_q - 1
+        relevant = jnp.logical_and(relevant,
+                                   k_start <= q_start + block_q - 1)
     if window > 0:
         relevant = jnp.logical_and(
             relevant, k_start + block_k - 1 > q_start - window)
@@ -55,7 +94,7 @@ def _kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
                                                   (block_q, block_k), 0)
         kpos = k_start + jax.lax.broadcasted_iota(jnp.int32,
                                                   (block_q, block_k), 1)
-        mask = jnp.ones((block_q, block_k), jnp.bool_)
+        mask = kv_bound_mask(kpos, t_real)            # ragged pad tail
         if causal:
             mask &= kpos <= qpos
         if window > 0:
@@ -85,42 +124,62 @@ def _kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
 def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
                     block_q: int = 128, block_k: int = 128,
                     interpret: bool = False):
-    """q (B,S,H,D), k/v (B,T,H,D) MHA (pre-repeat GQA heads). -> (B,S,H,D)."""
-    b, s, h, d = q.shape
-    t = k.shape[1]
+    """q (B,S,Hq,D), k/v (B,T,Hkv,D) -> (B,S,Hq,D).
+
+    GQA (Hq a multiple of Hkv) maps each query head to its KV head in
+    the kernel's index map — callers never pre-repeat. S/T need not
+    divide the block sizes: ragged tails are padded to the grid and
+    masked (kv) / sliced (q) away.
+    """
+    b, s, hq, d = q.shape
+    t, hkv = k.shape[1], k.shape[2]
+    if hq % hkv:
+        raise ValueError(
+            f"query heads ({hq}) must be a multiple of KV heads ({hkv})")
+    rep = hq // hkv
     block_q = min(block_q, s)
     block_k = min(block_k, t)
-    assert s % block_q == 0 and t % block_k == 0
-    nq, nk = s // block_q, t // block_k
+    q = pad_to_block(q, 1, block_q)
+    k = pad_to_block(k, 1, block_k)
+    v = pad_to_block(v, 1, block_k)
+    sp, tp = q.shape[1], k.shape[1]
+    nq, nk = sp // block_q, tp // block_k
 
-    # (B,S,H,D) -> (B*H, S, D) for a clean 3-D blocking
-    qr = q.transpose(0, 2, 1, 3).reshape(b * h, s, d)
-    kr = k.transpose(0, 2, 1, 3).reshape(b * h, t, d)
-    vr = v.transpose(0, 2, 1, 3).reshape(b * h, t, d)
+    # (B,S,H,D) -> (B*H, S, D) for a clean 3-D blocking; KV keeps Hkv rows
+    qr = q.transpose(0, 2, 1, 3).reshape(b * hq, sp, d)
+    kr = k.transpose(0, 2, 1, 3).reshape(b * hkv, tp, d)
+    vr = v.transpose(0, 2, 1, 3).reshape(b * hkv, tp, d)
 
     kernel = functools.partial(
         _kernel, causal=causal, window=window, block_q=block_q,
-        block_k=block_k, nk=nk, sm_scale=1.0 / np.sqrt(d))
+        block_k=block_k, nk=nk, t_real=t, sm_scale=1.0 / np.sqrt(d))
+
+    # GQA head fold: query-head program bh = batch*hq + qh reads KV row
+    # (batch, qh // rep) — same mapping as the paged decode kernel
+    def _kv_row(bh):
+        return (bh // hq) * hkv + (bh % hq) // rep
 
     from jax.experimental.pallas import tpu as pltpu
     out = pl.pallas_call(
         kernel,
-        grid=(b * h, nq, nk),
+        grid=(b * hq, nq, nk),
         in_specs=[
             pl.BlockSpec((1, block_q, d), lambda bh, qi, ki: (bh, qi, 0)),
-            pl.BlockSpec((1, block_k, d), lambda bh, qi, ki: (bh, ki, 0)),
-            pl.BlockSpec((1, block_k, d), lambda bh, qi, ki: (bh, ki, 0)),
+            pl.BlockSpec((1, block_k, d),
+                         lambda bh, qi, ki: (_kv_row(bh), ki, 0)),
+            pl.BlockSpec((1, block_k, d),
+                         lambda bh, qi, ki: (_kv_row(bh), ki, 0)),
         ],
         out_specs=pl.BlockSpec((1, block_q, d),
                                lambda bh, qi, ki: (bh, qi, 0)),
-        out_shape=jax.ShapeDtypeStruct((b * h, s, d), q.dtype),
+        out_shape=jax.ShapeDtypeStruct((b * hq, sp, d), q.dtype),
         scratch_shapes=[
             pltpu.VMEM((block_q,), jnp.float32),        # running max m
             pltpu.VMEM((block_q,), jnp.float32),        # running sum l
             pltpu.VMEM((block_q, d), jnp.float32),      # accumulator
         ],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=tpu_compiler_params(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(qr, kr, vr)
-    return out.reshape(b, h, s, d).transpose(0, 2, 1, 3)
+    return out.reshape(b, hq, sp, d).transpose(0, 2, 1, 3)[:, :s]

@@ -10,6 +10,7 @@ import jax
 
 from repro.kernels.flash_attention import flash_attention as _flash
 from repro.kernels.fused_mlp import fused_mlp as _fused_mlp
+from repro.kernels.paged_attention import paged_attention as _paged
 from repro.kernels.ssd_scan import ssd_scan as _ssd_scan
 
 INTERPRET = jax.default_backend() != "tpu"
@@ -34,10 +35,16 @@ def _flash_fwd(q, k, v, causal, window, block_q, block_k):
 
 def _flash_bwd(causal, window, block_q, block_k, res, g):
     """Analytic backward via softmax recompute (pure jnp; on TPU this
-    would be a second Pallas kernel — the math is identical)."""
+    would be a second Pallas kernel — the math is identical). GQA: the
+    recompute repeats KV to Hq width, then dk/dv group-sum back to Hkv —
+    the transpose of the forward's in-kernel head fold."""
     q, k, v = res
     b, s, h, d = q.shape
-    t = k.shape[1]
+    t, hkv = k.shape[1], k.shape[2]
+    rep = h // hkv
+    if rep > 1:
+        k = jnp.repeat(k, rep, axis=2)
+        v = jnp.repeat(v, rep, axis=2)
     s32 = jnp.einsum("bshd,bthd->bhst", q.astype(jnp.float32),
                      k.astype(jnp.float32)) / np.sqrt(d)
     qpos = jnp.arange(s)[:, None]
@@ -56,7 +63,11 @@ def _flash_bwd(causal, window, block_q, block_k, res, g):
     dsoft = dsoft / np.sqrt(d)
     dq = jnp.einsum("bhst,bthd->bshd", dsoft, k.astype(jnp.float32))
     dk = jnp.einsum("bhst,bshd->bthd", dsoft, q.astype(jnp.float32))
-    return dq.astype(q.dtype), dk.astype(k.dtype), dv.astype(v.dtype)
+    if rep > 1:
+        dk = dk.reshape(b, t, hkv, rep, d).sum(axis=3)
+        dv = dv.reshape(b, t, hkv, rep, d).sum(axis=3)
+    return dq.astype(q.dtype), dk.astype(res[1].dtype), \
+        dv.astype(res[2].dtype)
 
 
 _flash_trainable.defvjp(_flash_fwd, _flash_bwd)
@@ -64,14 +75,19 @@ _flash_trainable.defvjp(_flash_fwd, _flash_bwd)
 
 def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
                     block_q: int = 128, block_k: int = 128):
-    """GQA-aware entry: repeats KV heads to match Q heads, then kernels.
+    """GQA-aware entry: query heads map to their KV head inside the
+    kernel's index map (no HBM repeat — k/v stay Hkv wide end to end).
     Differentiable (custom VJP)."""
-    hq, hkv = q.shape[2], k.shape[2]
-    if hq != hkv:
-        rep = hq // hkv
-        k = jnp.repeat(k, rep, axis=2)
-        v = jnp.repeat(v, rep, axis=2)
     return _flash_trainable(q, k, v, causal, window, block_q, block_k)
+
+
+def paged_attention(q, k_pages, v_pages, page_table, pos):
+    """Fused flash-decoding paged attention: walks the page table with
+    online softmax across the page axis — never materializes the
+    gathered ``(B, P*page_size, ...)`` KV (kernels/paged_attention.py).
+    Decode-only (no VJP): the serve engine's per-step program."""
+    return _paged(q, k_pages, v_pages, page_table, pos,
+                  interpret=INTERPRET)
 
 
 def fused_mlp(x, w_gate, w_up, w_down, *, block_m: int = 256,

@@ -88,6 +88,12 @@ def main():
                     help="mixed step token budget: decode tokens for all "
                          "active slots plus prefill chunks share this "
                          "many tokens per step (must be >= --slots)")
+    ap.add_argument("--attn-backend", choices=("gather", "pallas"),
+                    default="gather",
+                    help="paged-attention decode path: 'gather' (XLA "
+                         "gather + dense mask) or 'pallas' (fused flash-"
+                         "decoding kernel walking the page table; "
+                         "interpret mode on CPU; needs the paged layout)")
     ap.add_argument("--shared-prefix", type=int, default=0, metavar="N",
                     help="prepend the same N-token system prompt to every "
                          "request (demonstrates --prefix-cache sharing)")
@@ -131,7 +137,8 @@ def main():
                     page_size=args.page_size, kv_pages=args.kv_pages,
                     prefix_cache=args.prefix_cache, lazy=args.lazy,
                     mixed=False if (args.no_mixed or args.dense) else None,
-                    chunk_tokens=args.chunk_tokens)
+                    chunk_tokens=args.chunk_tokens,
+                    attn_backend=args.attn_backend)
     if args.serve:
         wt = args.watchdog_timeout if args.watchdog_timeout > 0 else None
         server = session.serve_http(host=args.host, port=args.port,
@@ -170,6 +177,8 @@ def main():
     # decode trace/replica" states the invariant, not a dp-fold sum
     traces = max(r["decode_traces"] for r in st.get("replicas", [st]))
     layout = f"paged/{rep.page_size}tok-pages" if rep.paged else "dense"
+    if getattr(rep, "attn_backend", "gather") != "gather":
+        layout += f"+{rep.attn_backend}"
     par = f", tp{rep.tp}" + (f" x dp{eng.dp}" if hasattr(eng, "dp") else "")
     print(f"served {len(results)} requests, {total} tokens "
           f"in {dt:.2f}s ({total / dt:.1f} tok/s, {args.slots} slots{par}, "

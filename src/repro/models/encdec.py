@@ -155,7 +155,8 @@ def prefill(params, batch, cfg, cache, *, attn_impl="auto"):
     return x @ params["lm_head"], cache
 
 
-def decode_step(params, cache, token, pos, cfg):
+def decode_step(params, cache, token, pos, cfg, *,
+                attn_backend: str = "gather"):
     """``pos``: scalar (lockstep) or (B,) per-row vector (slot-table).
 
     With a ``"ptab"`` page table in the cache (the serve engine's paged
@@ -164,7 +165,9 @@ def decode_step(params, cache, token, pos, cfg):
     is the FIXED encoder context, so paging it would buy nothing. An
     optional ``"wtab"`` write table redirects the KV scatter only (the
     mixed token-slot step's shared-prefix recompute path — see the dense
-    transformer's decode_step).
+    transformer's decode_step). ``attn_backend`` picks the paged
+    self-attention path: ``"gather"`` or the fused ``"pallas"`` kernel
+    (layers.paged_attention).
     """
     x = params["tok_embed"][token].astype(jnp.dtype(cfg.dtype))
     paged = "ptab" in cache
@@ -189,7 +192,7 @@ def decode_step(params, cache, token, pos, cfg):
                                         cache.get("wtab", cache["ptab"]),
                                         positions)
             ctx = paged_attention(q, kv["k"], kv["v"], cache["ptab"],
-                                  positions)
+                                  positions, backend=attn_backend)
         else:
             kv = kvcache.write_kv(kv, k, v, pos)
             ctx = attention(q, kv["k"], kv["v"], causal=True, q_offset=pos,

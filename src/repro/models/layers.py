@@ -116,7 +116,8 @@ def attention_full(q, k, v, *, causal: bool, window: int = 0,
     return jnp.einsum("bhst,bthd->bshd", probs, v)
 
 
-def paged_attention(q, k_pages, v_pages, page_table, pos):
+def paged_attention(q, k_pages, v_pages, page_table, pos, *,
+                    backend: str = "gather"):
     """Decode-time block-table attention over a paged KV pool (vLLM-style).
 
     q: (B, 1, Hq, D) — one fresh token per slot-table row.
@@ -125,26 +126,42 @@ def paged_attention(q, k_pages, v_pages, page_table, pos):
     pos: (B,) per-row cursors (tokens already in context, incl. this one's
     write — the query attends to positions [0, pos]).
 
-    Each row's pages are gathered in logical-block order, so the gathered
-    axis IS the position axis and the dense mask machinery applies
-    unchanged: ``kv_len = pos + 1`` hides null/garbage tail pages. The
-    gather is a table lookup — table VALUES change between steps, shapes
-    never do, so the batched decode program still traces exactly once.
+    Two backends, token-identical greedy outputs:
 
-    Cost note: the gather materializes ``P * page_size`` positions per
-    row per layer, where ``P`` is the WIDTH OF THE TABLE PASSED IN — the
-    serve engine hands this function a table clipped to the power-of-two
-    bucket of the allocator's per-slot page high-water mark
-    (serve/step.page_bucket), so decode cost tracks pool occupancy
+    ``backend="gather"`` (default) gathers each row's pages in logical-
+    block order, so the gathered axis IS the position axis and the dense
+    mask machinery applies unchanged: ``kv_len = pos + 1`` hides
+    null/garbage tail pages. The gather is a table lookup — table VALUES
+    change between steps, shapes never do, so the batched decode program
+    still traces exactly once. It materializes ``P * page_size``
+    positions per row per layer, where ``P`` is the WIDTH OF THE TABLE
+    PASSED IN — the serve engine hands this function a table clipped to
+    the power-of-two bucket of the allocator's per-slot page high-water
+    mark (serve/step.page_bucket), so decode cost tracks pool occupancy
     rather than ``max_len`` and the program only retraces when the
     high-water crosses a bucket boundary.
 
+    ``backend="pallas"`` runs the fused flash-decoding kernel
+    (kernels/paged_attention.py): one grid block per page with online
+    softmax carried across the page axis, the pool indexed through the
+    scalar-prefetched table — contiguous KV is never materialized and
+    GQA heads fold in-kernel. Same masking (``kv_len = pos + 1``), same
+    trace cadence (shapes depend only on the bucketed table width); on
+    CPU it runs in interpret mode (kernels/ops.INTERPRET).
+
     TP note: under a ("data", "model") mesh the pool is head-sharded
-    over "model" (core/sharding.cache_pspecs) — the gather indexes the
-    unsharded page axis, so each device gathers only its Hkv/tp heads
-    and the attention math below stays head-local until the row-sharded
-    output projection's all-reduce.
+    over "model" (core/sharding.cache_pspecs) — both backends index the
+    unsharded page axis and stay head-local per device (each sees its
+    own Hkv/tp heads) until the row-sharded output projection's
+    all-reduce.
     """
+    if backend == "pallas":
+        from repro.kernels import ops as kops
+        return kops.paged_attention(q, k_pages, v_pages, page_table, pos)
+    if backend != "gather":
+        raise ValueError(
+            f"paged_attention backend must be 'gather' or 'pallas', "
+            f"got {backend!r}")
     kv_len = jnp.asarray(pos) + 1
     k = gather_pages(k_pages, page_table)
     v = gather_pages(v_pages, page_table)

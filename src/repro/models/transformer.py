@@ -161,7 +161,8 @@ def prefill(params, batch, cfg, cache, *, attn_impl: str = "auto",
     return _head(params, x[:, -1:], cfg), cache
 
 
-def decode_step(params, cache, token, pos, cfg):
+def decode_step(params, cache, token, pos, cfg, *,
+                attn_backend: str = "gather"):
     """token: (B,1) int32; pos: scalar int32 (tokens generated so far) for
     the lockstep paths, or a (B,) vector for the slot-table decode — each
     row then reads/writes its own cursor.
@@ -174,7 +175,10 @@ def decode_step(params, cache, token, pos, cfg):
     SCATTER only (attention still gathers through ``ptab``) — the mixed
     token-slot step uses it to recompute positions whose KV already
     lives in shared prefix pages without rewriting pages other slots
-    read (rows redirected to the null page 0).
+    read (rows redirected to the null page 0). ``attn_backend`` picks
+    the paged-attention execution path — ``"gather"`` (XLA gather +
+    dense mask) or ``"pallas"`` (fused flash-decoding kernel); see
+    layers.paged_attention.
 
     Returns (logits (B,1,V), new cache).
     """
@@ -200,7 +204,7 @@ def decode_step(params, cache, token, pos, cfg):
                                         cache.get("wtab", cache["ptab"]),
                                         positions[:, 0])
             ctx = paged_attention(q, kv["k"], kv["v"], cache["ptab"],
-                                  positions[:, 0])
+                                  positions[:, 0], backend=attn_backend)
         elif use_cp:
             # context-parallel: shard-local write + psum-softmax combine
             ctx, kv = cp_decode_attention(q, kv, k, v, pos,

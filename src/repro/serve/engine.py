@@ -209,7 +209,8 @@ class ServeEngine:
                  page_size: int = 16, kv_pages: Optional[int] = None,
                  prefix_cache: bool = False, lazy: bool = False,
                  scheduler=None, mesh=None, strategy=None,
-                 mixed: Optional[bool] = None, chunk_tokens: int = 256):
+                 mixed: Optional[bool] = None, chunk_tokens: int = 256,
+                 attn_backend: str = "gather"):
         if cfg.arch_type not in SERVABLE_ARCHS:
             raise ValueError(
                 f"{cfg.name}: the engine drives token/frame decoders "
@@ -263,6 +264,26 @@ class ServeEngine:
                 "reserved in the budget before any prefill chunk")
         self.mixed = bool(mixed)
         self.chunk_tokens = int(chunk_tokens)
+        # -------- paged-attention decode backend (PR 8): "gather" keeps
+        # the XLA gather + dense-mask path; "pallas" runs the fused
+        # flash-decoding kernel (kernels/paged_attention.py — interpret
+        # mode on CPU). Token-identical greedy outputs, same one-trace-
+        # per-bucket cadence; the kernel only exists for the paged pool.
+        if attn_backend not in ("gather", "pallas"):
+            raise ValueError(
+                f"attn_backend must be 'gather' or 'pallas', "
+                f"got {attn_backend!r}")
+        if attn_backend == "pallas" and not paged:
+            raise ValueError(
+                f"{cfg.name}: attn_backend='pallas' is the fused paged-"
+                "attention decode kernel — it needs the paged KV layout "
+                "(drop paged=False)")
+        self.attn_backend = attn_backend
+        # only the paged decoders (transformer/encdec decode_step) take
+        # the kwarg; the default backend stays a clean positional call so
+        # ssm/hybrid decode paths are untouched
+        self._attn_kw = {} if attn_backend == "gather" \
+            else {"attn_backend": attn_backend}
         # -------- intra-operator (TP) sharding: mesh + logical-axis rules
         self.mesh = mesh
         self.tp = int(mesh.shape.get("model", 1)) if mesh is not None else 1
@@ -317,7 +338,11 @@ class ServeEngine:
                       # requests, audio encoder traces (the mixed path
                       # runs the encoder as its own small program)
                       "prefill_chunk_tokens": 0, "expired": 0,
-                      "encode_traces": 0}
+                      "encode_traces": 0,
+                      # which paged-attention path the decode program
+                      # runs (PR 8); a string — metrics render it as a
+                      # labeled serve_engine_decode_backend info gauge
+                      "decode_backend": attn_backend}
         self._rng = jax.random.key(seed)
         self._sched = scheduler if scheduler is not None \
             else FifoLeastProgress()
@@ -441,7 +466,7 @@ class ServeEngine:
         on-device sampling + active-slot masking."""
         self.stats["decode_traces"] += 1     # Python side effect: trace-time only
         logits, cache = self.model.decode_step(params, cache, tokens, pos,
-                                               self.cfg)
+                                               self.cfg, **self._attn_kw)
         tok = sample_tokens(logits[:, -1], rng=rng,
                             temperature=self.temperature)
         tok = jnp.where(active, tok, 0)
@@ -515,7 +540,7 @@ class ServeEngine:
         if "xkv" in cache:
             view["xkv"] = jax.tree.map(lambda a: a[:, slot], cache["xkv"])
         logits, out = self.model.decode_step(params, view, tokens, pos,
-                                             self.cfg)
+                                             self.cfg, **self._attn_kw)
         tok = sample_tokens(logits[:, -1], rng=rng,
                             temperature=self.temperature)
         tok = jnp.where(active, tok, 0)
@@ -1332,7 +1357,8 @@ class ServeEngine:
         property) and stay monotonic. Pool gauges restart from the
         current occupancy; the prefix cache's hit/miss counters restart
         from zero."""
-        keep = ("decode_traces", "prefill_traces", "encode_traces")
+        keep = ("decode_traces", "prefill_traces", "encode_traces",
+                "decode_backend")
         for k, v in self.stats.items():
             if k not in keep:
                 self.stats[k] = 0.0 if isinstance(v, float) else 0

@@ -57,7 +57,13 @@ Metric glossary (the names ``GET /metrics`` exposes):
                                               preemptions, cow_copies,
                                               decode_steps, step_count,
                                               decode_tokens, wall_time_s,
-                                              tokens_per_s_ewma, ...)
+                                              tokens_per_s_ewma, ...);
+                                              string fields export info-
+                                              style — decode_backend
+                                              (the engine's paged-
+                                              attention path) becomes
+                                              ``serve_engine_decode_backend
+                                              {value="gather|pallas"} 1.0``
 """
 from __future__ import annotations
 
@@ -269,9 +275,11 @@ class ServeMetrics:
     ``render(extra=engine.stats)`` additionally exports each numeric
     stats field as a ``serve_engine_<name>`` gauge, so one scrape carries
     the latency picture AND the pool/prefix/preemption telemetry the
-    engine already keeps. Non-numeric fields (the router's per-replica
-    breakdown list) are skipped; per-replica detail stays available via
-    ``stats`` itself.
+    engine already keeps. String fields (``decode_backend``) export
+    info-style — ``serve_engine_decode_backend{value="pallas"} 1.0``;
+    other non-numeric fields (the router's per-replica breakdown list)
+    are skipped; per-replica detail stays available via ``stats``
+    itself.
     """
 
     def __init__(self, *, window: int = 4096):
@@ -341,10 +349,16 @@ class ServeMetrics:
             return text
         lines: List[str] = []
         for key, value in extra.items():
+            name = f"serve_engine_{key}"
+            if isinstance(value, str):
+                # identity fields (decode_backend) export Prometheus
+                # info-style: constant 1 with the value as a label
+                lines.append(f"# TYPE {name} gauge")
+                lines.append(f'{name}{{value="{value}"}} 1.0')
+                continue
             if isinstance(value, bool) or not isinstance(value,
                                                          (int, float)):
                 continue
-            name = f"serve_engine_{key}"
             lines.append(f"# TYPE {name} gauge")
             lines.append(f"{name} {_fmt(float(value))}")
         return text + "\n".join(lines) + ("\n" if lines else "")

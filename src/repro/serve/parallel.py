@@ -198,7 +198,14 @@ class ReplicaRouter:
         aggregate decode rate; per-replica rates stay readable under
         ``replicas``."""
         per = [dict(e.stats) for e in self.engines]
-        agg: Dict = {k: sum(p[k] for p in per) for k in per[0]}
+        agg: Dict = {}
+        for k, v in per[0].items():
+            if isinstance(v, bool) or not isinstance(v, (int, float)):
+                # identity fields (decode_backend) don't sum; replicas
+                # are homogeneous, so replica 0's value speaks for all
+                agg[k] = v
+            else:
+                agg[k] = sum(p[k] for p in per)
         agg["replicas"] = per
         return agg
 

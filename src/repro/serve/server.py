@@ -13,8 +13,11 @@ Three endpoints, no dependencies beyond ``http.server``:
     ``deadline_s`` is a relative SLO: a request still QUEUED when it
     elapses is dropped (``done=false, expired=true``, no tokens) instead
     of occupying a slot it can no longer use. Validation failures
-    (empty prompt, pool bounds, bad JSON) are HTTP 400 with the
-    engine's message.
+    (empty prompt, pool bounds, bad JSON, non-numeric ``"timeout"``)
+    are HTTP 400 with the engine's message. A non-streaming request
+    waits at most ``"timeout"`` seconds (client-set), else the server's
+    ``result_timeout`` / watchdog timeout / 300s cap, and answers 504 —
+    a wedged request never pins a handler thread forever.
   * ``GET /metrics`` — Prometheus text exposition: the driver's
     TTFT/TPOT/step summaries plus every numeric ``engine.stats`` field
     as ``serve_engine_*`` gauges (serve/metrics.py documents the
@@ -42,11 +45,21 @@ from repro.serve.driver import AsyncDriver
 #: request body / streamed line size guard (1 MiB)
 MAX_BODY_BYTES = 1 << 20
 
+#: non-streaming /generate wait cap when neither the client sent a
+#: "timeout" nor the server was built with ``result_timeout`` and the
+#: driver runs no watchdog — a handler thread must never block forever
+#: on a wedged or never-admitted request (it 504s instead)
+DEFAULT_RESULT_TIMEOUT_S = 300.0
 
-def _make_handler(driver: AsyncDriver):
+
+def _make_handler(driver: AsyncDriver,
+                  result_timeout: Optional[float] = None):
     """Handler class closed over ``driver`` (BaseHTTPRequestHandler is
     instantiated per connection by the server, so state rides on the
-    class)."""
+    class). ``result_timeout`` caps how long a non-streaming /generate
+    waits for completion when the client sent no ``"timeout"``; None
+    falls back to the driver's watchdog timeout, then
+    :data:`DEFAULT_RESULT_TIMEOUT_S`."""
 
     class Handler(BaseHTTPRequestHandler):
         protocol_version = "HTTP/1.1"
@@ -116,6 +129,11 @@ def _make_handler(driver: AsyncDriver):
                         not all(isinstance(t, int) for t in prompt):
                     raise ValueError("prompt must be a list of token ids")
                 deadline_s = spec.get("deadline_s")
+                # validate BEFORE submit: a non-numeric "timeout" must
+                # 400 like any other bad field, not escape as a 500
+                timeout = spec.get("timeout")
+                if timeout is not None:
+                    timeout = float(timeout)
                 stream = driver.submit(
                     prompt, int(spec.get("max_new", 16)),
                     priority=int(spec.get("priority", 0)),
@@ -128,8 +146,16 @@ def _make_handler(driver: AsyncDriver):
             if spec.get("stream"):
                 self._stream_response(stream)
             else:
+                if timeout is None:
+                    # no client timeout: never block the handler thread
+                    # forever on a wedged/never-admitted request — wait
+                    # at most the server-level cap, then 504
+                    timeout = result_timeout \
+                        if result_timeout is not None \
+                        else (driver.watchdog_timeout
+                              or DEFAULT_RESULT_TIMEOUT_S)
                 try:
-                    rec = stream.result(timeout=spec.get("timeout"))
+                    rec = stream.result(timeout=timeout)
                 except TimeoutError as e:
                     self._send_json({"error": str(e),
                                      "rid": stream.rid}, 504)
@@ -177,11 +203,13 @@ class ServeHTTPServer:
     """
 
     def __init__(self, driver: AsyncDriver, *, host: str = "127.0.0.1",
-                 port: int = 0, own_driver: bool = False):
+                 port: int = 0, own_driver: bool = False,
+                 result_timeout: Optional[float] = None):
         self.driver = driver
         self._own_driver = own_driver
-        self._httpd = ThreadingHTTPServer((host, port),
-                                          _make_handler(driver))
+        self._httpd = ThreadingHTTPServer(
+            (host, port), _make_handler(driver,
+                                        result_timeout=result_timeout))
         self._httpd.daemon_threads = True
         self.host, self.port = self._httpd.server_address[:2]
         self._thread = threading.Thread(target=self._httpd.serve_forever,
@@ -208,10 +236,15 @@ class ServeHTTPServer:
 
 def serve_http(engine, *, host: str = "127.0.0.1", port: int = 0,
                watchdog_timeout: Optional[float] = None,
-               metrics=None) -> ServeHTTPServer:
+               metrics=None,
+               result_timeout: Optional[float] = None) -> ServeHTTPServer:
     """Wrap ``engine`` (ServeEngine or ReplicaRouter) in an AsyncDriver
     and expose it over HTTP; the returned server owns the driver
-    (``close()`` stops both)."""
+    (``close()`` stops both). ``result_timeout`` caps non-streaming
+    /generate waits when the client sends no ``"timeout"`` (default:
+    the watchdog timeout, else 300s — a wedged request 504s instead of
+    pinning its handler thread forever)."""
     driver = AsyncDriver(engine, watchdog_timeout=watchdog_timeout,
                          metrics=metrics)
-    return ServeHTTPServer(driver, host=host, port=port, own_driver=True)
+    return ServeHTTPServer(driver, host=host, port=port, own_driver=True,
+                           result_timeout=result_timeout)

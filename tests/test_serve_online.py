@@ -27,7 +27,7 @@ from repro.serve.engine import ServeEngine
 from repro.serve.metrics import (Histogram, MetricsRegistry, ServeMetrics,
                                  quantile)
 from repro.serve.parallel import ReplicaRouter, replica_meshes
-from repro.serve.server import serve_http
+from repro.serve.server import ServeHTTPServer, serve_http
 
 CFG = ModelConfig(name="online-dense", arch_type="dense", num_layers=2,
                   d_model=64, num_heads=4, num_kv_heads=2, d_ff=128,
@@ -410,7 +410,9 @@ def test_http_endpoints_over_socket():
         # validation failures are 400 with the reason, not a wedged socket
         for bad in ({"max_new": 4},             # no prompt
                     {"prompt": ["a", "b"]},     # not token ids
-                    {"prompt": []}):            # engine rejects empty
+                    {"prompt": []},             # engine rejects empty
+                    {"prompt": [1, 2],          # non-numeric timeout is a
+                     "timeout": "soon"}):       # bad field, not a 500
             with pytest.raises(urllib.error.HTTPError) as ei:
                 _post(f"{server.url}/generate", bad)
             assert ei.value.code == 400
@@ -419,3 +421,43 @@ def test_http_endpoints_over_socket():
         with pytest.raises(urllib.error.HTTPError) as ei:
             _get(f"{server.url}/nope")
         assert ei.value.code == 404
+
+
+def test_generate_without_timeout_504s_on_stall():
+    """A non-streaming /generate with NO client "timeout" used to block
+    its handler thread forever when the engine wedged. The server now
+    caps the wait (result_timeout -> watchdog timeout -> 300s default)
+    and answers 504 — the socket comes back, the thread is released."""
+    params = _params(CFG)
+    prompts = _prompts(np.random.default_rng(9), CFG, (5,))
+    eng = ServeEngine(CFG, params, slots=2, max_len=64, paged=True)
+
+    def stalled_step(drv):
+        # a wedged engine: every step burns wall time and produces no
+        # tokens (each call returns, so submits still enqueue — the
+        # request just never completes)
+        time.sleep(0.05)
+
+    drv = AsyncDriver(eng, step_fn=stalled_step)
+    try:
+        with ServeHTTPServer(drv, port=0, result_timeout=0.5) as server:
+            t0 = time.monotonic()
+            with pytest.raises(urllib.error.HTTPError) as ei:
+                _post(f"{server.url}/generate",
+                      {"prompt": [int(t) for t in prompts[0]],
+                       "max_new": 4})           # note: no "timeout"
+            assert ei.value.code == 504
+            body = json.loads(ei.value.read())
+            assert "rid" in body and "error" in body
+            # bounded by the server cap, not DEFAULT_RESULT_TIMEOUT_S
+            assert time.monotonic() - t0 < 30.0
+            # an explicit client timeout still wins over the server cap
+            t0 = time.monotonic()
+            with pytest.raises(urllib.error.HTTPError) as ei:
+                _post(f"{server.url}/generate",
+                      {"prompt": [int(t) for t in prompts[0]],
+                       "max_new": 4, "timeout": 0.1})
+            assert ei.value.code == 504
+            assert time.monotonic() - t0 < 30.0
+    finally:
+        drv.stop(drain=False)
