@@ -63,11 +63,25 @@ TINY = ModelConfig(name="bench-serve", arch_type="dense", num_layers=2,
                    vocab_size=256, dtype="float32")
 
 
-def _workload(rng, n_requests, mixed: bool = False):
+def _workload(rng, n_requests, mixed: bool = False,
+              repetitive: bool = False):
     """Uniform short prompts by default; ``mixed=True`` interleaves LONG
     (40-56 token) and short (4-8) prompts — the chunked-prefill stress
     mix, where a long admission stalls every decoding slot unless
-    prefill is chunked into the step budget."""
+    prefill is chunked into the step budget. ``repetitive=True`` tiles a
+    short random motif into each prompt — the prompt-lookup drafter's
+    best case (templated/looping text), and the tiny model's greedy
+    continuation of a periodic context quickly enters its own cycle, so
+    the n-gram drafter keeps matching and ``--spec-k`` rows show > 1
+    accepted token per decode step."""
+    if repetitive:
+        prompts = []
+        for _ in range(n_requests):
+            motif = rng.integers(0, TINY.vocab_size,
+                                 size=(int(rng.integers(3, 6)),))
+            reps = int(rng.integers(4, 7))
+            prompts.append(np.tile(motif, reps).astype(np.int32))
+        return prompts
     if mixed:
         return [rng.integers(
             0, TINY.vocab_size,
@@ -84,7 +98,8 @@ def bench(params, *, slots: int, n_requests: int, max_new: int,
           page_size: int = 16, kv_pages=None, prefix_cache: bool = False,
           lazy: bool = False, tp: int = 1, dp: int = 1,
           mixed=None, chunk_tokens=None, mixed_workload: bool = False,
-          attn_backend: str = "gather") -> dict:
+          attn_backend: str = "gather", spec_k: int = 0,
+          drafter: str = "ngram", repetitive: bool = False) -> dict:
     kw = dict(slots=slots, max_len=max_len, paged=paged,
               page_size=page_size, kv_pages=kv_pages,
               prefix_cache=prefix_cache, lazy=lazy,
@@ -93,6 +108,10 @@ def bench(params, *, slots: int, n_requests: int, max_new: int,
         kw["mixed"] = mixed
     if chunk_tokens is not None:
         kw["chunk_tokens"] = chunk_tokens
+    if spec_k > 0:
+        from repro.serve.speculative import SpecConfig
+        kw["spec"] = SpecConfig(k=spec_k, drafter=drafter)
+        kw.setdefault("chunk_tokens", max(256, slots * (spec_k + 1)))
     if dp > 1:
         eng = ReplicaRouter(TINY, params, dp=dp, tp=tp, **kw)
     elif tp > 1:
@@ -101,7 +120,8 @@ def bench(params, *, slots: int, n_requests: int, max_new: int,
     else:
         eng = ServeEngine(TINY, params, **kw)
     rng = np.random.default_rng(seed)
-    prompts = _workload(rng, n_requests, mixed=mixed_workload)
+    prompts = _workload(rng, n_requests, mixed=mixed_workload,
+                        repetitive=repetitive)
 
     # warm pass (batch run): traces decode + every prefill bucket
     for i, p in enumerate(prompts):
@@ -140,6 +160,19 @@ def bench(params, *, slots: int, n_requests: int, max_new: int,
         "dp": dp,
         "mixed": bool(getattr(rep0, "mixed", False)),
         "chunk_tokens": int(getattr(rep0, "chunk_tokens", 0)),
+        "spec_k": spec_k,
+        "drafter": drafter if spec_k > 0 else "",
+        "spec_drafted": st.get("spec_drafted", 0),
+        "spec_accepted": st.get("spec_accepted", 0),
+        "spec_accept_rate": round(
+            st.get("spec_accepted", 0) / max(st.get("spec_drafted", 0), 1),
+            4),
+        # decode tokens per (step, decoding slot) pair, prefill-sampled
+        # firsts excluded: exactly 1.0 without speculation regardless of
+        # occupancy, in (1, k+1] when drafts land
+        "accepted_tokens_per_step": round(
+            (st["decode_tokens"] - st["prefills"])
+            / max(st.get("decode_slot_steps", 0), 1), 4),
         "requests": n_requests,
         "tokens": toks,
         "wall_s": round(dt, 4),
@@ -218,6 +251,22 @@ def main():
                          "implies --paged); rows carry the backend and "
                          "an out_digest column so gather-vs-pallas runs "
                          "can be diffed for token identity")
+    ap.add_argument("--spec-k", type=int, default=0, metavar="K",
+                    help="speculative decode: draft up to K tokens per "
+                         "slot per step, verified in the same mixed "
+                         "dispatch (0 disables; implies --paged; rows "
+                         "gain spec_accept_rate and "
+                         "accepted_tokens_per_step columns, and "
+                         "out_digest must equal the spec-off run's — "
+                         "the CI speculative-smoke identity check)")
+    ap.add_argument("--drafter", choices=("ngram", "model"),
+                    default="ngram",
+                    help="--spec-k drafter: 'ngram' prompt lookup or "
+                         "'model' (tiny fresh-params draft model)")
+    ap.add_argument("--repetitive", action="store_true",
+                    help="tile short random motifs into every prompt — "
+                         "the prompt-lookup drafter's best case; the "
+                         "workload the speculative-smoke job drives")
     ap.add_argument("--json", type=str, default="",
                     help="write results to this path (default: stdout)")
     args = ap.parse_args()
@@ -233,21 +282,30 @@ def main():
                    for tp in (1, 2, 4) for dp in (1, 2)
                    if tp * dp <= jax.device_count()]
     elif args.mixed_workload:
+        # spec rides on the mixed step only, so the split (mixed=False)
+        # baseline rows always run spec-off; the mixed rows carry
+        # --spec-k so the long/short mix reports accept rate and
+        # accepted tokens/step next to TTFT
         results = [bench(params, slots=s, n_requests=args.requests,
                          max_new=args.max_new, max_len=args.max_len,
                          paged=True, page_size=args.page_size,
                          kv_pages=args.kv_pages, mixed=mixed,
                          chunk_tokens=args.chunk_tokens,
-                         mixed_workload=True)
+                         mixed_workload=True,
+                         spec_k=args.spec_k if mixed else 0,
+                         drafter=args.drafter)
                    for s in args.slots for mixed in (False, True)]
     else:
         results = [bench(params, slots=s, n_requests=args.requests,
                          max_new=args.max_new, max_len=args.max_len,
                          paged=(args.paged or args.tp > 1 or args.dp > 1
-                                or args.attn_backend == "pallas"),
+                                or args.attn_backend == "pallas"
+                                or args.spec_k > 0),
                          page_size=args.page_size, kv_pages=args.kv_pages,
                          tp=args.tp, dp=args.dp,
-                         attn_backend=args.attn_backend)
+                         attn_backend=args.attn_backend,
+                         spec_k=args.spec_k, drafter=args.drafter,
+                         repetitive=args.repetitive)
                    for s in args.slots]
     report = {"config": TINY.name, "results": results}
     out = json.dumps(report, indent=2)
@@ -257,6 +315,10 @@ def main():
         base = results[0]["tokens_per_s"]
         for r in results:
             mode = " mixed" if r["mixed"] else " split"
+            if r["spec_k"]:
+                mode += (f" spec{r['spec_k']}/{r['drafter']} "
+                         f"acc={r['spec_accept_rate']:.2f} "
+                         f"tok/step={r['accepted_tokens_per_step']:.2f}")
             print(f"slots={r['slots']:>2} tp{r['tp']} dp{r['dp']}{mode} "
                   f"{r['tokens_per_s']:>8.1f} tok/s "
                   f"({r['tokens_per_s'] / base:.2f}x, "

@@ -152,7 +152,8 @@ class Session:
               page_size: int = 16, kv_pages: Optional[int] = None,
               prefix_cache: bool = False, lazy: bool = False,
               scheduler=None, mixed: Optional[bool] = None,
-              chunk_tokens: int = 256, attn_backend: str = "gather"):
+              chunk_tokens: int = 256, attn_backend: str = "gather",
+              spec=None):
         """Continuous-batching engine over this session's params: one
         batched jitted decode advances the whole slot table per step.
         ``temperature > 0`` switches the on-device sampler from greedy to
@@ -218,7 +219,17 @@ class Session:
         never materialized). Greedy outputs are token-identical, the
         one-trace-per-bucket cadence is unchanged, and it composes with
         ``tp`` (head-sharded pool stays head-local per device); on CPU
-        the kernel runs in interpret mode. Requires the paged layout."""
+        the kernel runs in interpret mode. Requires the paged layout.
+
+        Speculative decode: ``spec=SpecConfig(k=4, drafter="ngram")``
+        (serve/speculative.py) packs up to ``k`` self-drafted tokens per
+        decoding slot as extra rows of the mixed step, verifies them in
+        the same single dispatch and accepts the longest greedy-matching
+        prefix plus one bonus token — up to ``k + 1`` tokens per step
+        for one program launch, bit-identical greedy output. Requires
+        the mixed step, greedy sampling (``temperature == 0``) and
+        ``chunk_tokens >= slots * (k + 1)``; composes with
+        prefix+lazy sharing, both attn backends and ``tp``/``dp``."""
         p = plan if plan is not None else self.plan
         if tp is None or dp is None:
             if p is not None and p.degrees.pp > 1:
@@ -235,7 +246,7 @@ class Session:
                   paged=paged, page_size=page_size, kv_pages=kv_pages,
                   prefix_cache=prefix_cache, lazy=lazy, scheduler=scheduler,
                   mixed=mixed, chunk_tokens=chunk_tokens,
-                  attn_backend=attn_backend)
+                  attn_backend=attn_backend, spec=spec)
         if tp == 1 and dp == 1:
             return ServeEngine(self.cfg, self.params, **kw)
         # serve on the session's own device placement when its mesh IS the

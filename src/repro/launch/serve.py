@@ -12,10 +12,14 @@ prompt prefixes copy-on-write (pair with ``--shared-prefix N`` for a
 visible hit rate), and ``--lazy`` grows reservations on page-boundary
 crossings with preempt/requeue under pressure. Audio (enc-dec) archs
 serve with synthetic frame embeddings standing in for the stubbed
-mel+conv frontend. On the paged layout the engine steps in MIXED mode
-by default — one program per step over a ``--chunk-tokens`` token
-budget shared between decode and chunked prefill (``--no-mixed``
-restores the legacy split prefill/decode programs).
+mel+conv frontend; VLM archs likewise serve with synthetic image patch
+embeddings (the stubbed ViT+projector's output). On the paged layout
+the engine steps in MIXED mode by default — one program per step over a
+``--chunk-tokens`` token budget shared between decode and chunked
+prefill (``--no-mixed`` restores the legacy split prefill/decode
+programs); ``--spec-k K`` adds speculative multi-token decode — up to K
+self-drafted tokens per slot verified in the same dispatch
+(``--drafter ngram|model``), greedy output bit-identical.
 
 Parallel serving (serve/parallel.py): ``--tp N`` shards the one-trace
 decode program over N devices (Megatron layout, head-sharded KV pool),
@@ -94,6 +98,17 @@ def main():
                          "gather + dense mask) or 'pallas' (fused flash-"
                          "decoding kernel walking the page table; "
                          "interpret mode on CPU; needs the paged layout)")
+    ap.add_argument("--spec-k", type=int, default=0, metavar="K",
+                    help="speculative decode: draft up to K tokens per "
+                         "slot per step and verify them in the same "
+                         "mixed dispatch (0 disables; greedy only, "
+                         "needs the mixed step)")
+    ap.add_argument("--drafter", choices=("ngram", "model"),
+                    default="ngram",
+                    help="--spec-k drafter: 'ngram' prompt lookup "
+                         "(free, self-speculative) or 'model' (tiny "
+                         "greedy draft model; fresh params — "
+                         "demonstrates plumbing, drafts at chance)")
     ap.add_argument("--shared-prefix", type=int, default=0, metavar="N",
                     help="prepend the same N-token system prompt to every "
                          "request (demonstrates --prefix-cache sharing)")
@@ -125,11 +140,11 @@ def main():
     args = ap.parse_args()
 
     cfg = get_smoke(args.arch).with_(dtype="float32")
-    if cfg.arch_type == "vlm":
-        raise SystemExit(f"{args.arch}: VLM serving needs the stubbed "
-                         "vision frontend wired into engine prefill "
-                         "(see serve/step.py)")
     session = Session(cfg)
+    spec = None
+    if args.spec_k > 0:
+        from repro.serve.speculative import SpecConfig
+        spec = SpecConfig(k=args.spec_k, drafter=args.drafter)
     serve_kw = dict(tp=args.tp, dp=args.dp,
                     slots=args.slots, max_len=args.max_len,
                     temperature=args.temperature,
@@ -138,7 +153,7 @@ def main():
                     prefix_cache=args.prefix_cache, lazy=args.lazy,
                     mixed=False if (args.no_mixed or args.dense) else None,
                     chunk_tokens=args.chunk_tokens,
-                    attn_backend=args.attn_backend)
+                    attn_backend=args.attn_backend, spec=spec)
     if args.serve:
         wt = args.watchdog_timeout if args.watchdog_timeout > 0 else None
         server = session.serve_http(host=args.host, port=args.port,
@@ -161,9 +176,15 @@ def main():
         n = int(rng.integers(4, 16))
         frames = (rng.standard_normal((cfg.encoder_ctx, cfg.d_model))
                   .astype(np.float32) if cfg.arch_type == "audio" else None)
+        # VLM archs carry synthetic patch embeddings, standing in for
+        # the stubbed ViT+projector frontend exactly as frames stand in
+        # for the audio mel+conv stack
+        images = (rng.standard_normal((cfg.num_image_tokens, cfg.d_model))
+                  .astype(np.float32) if cfg.arch_type == "vlm" else None)
         prompt = np.concatenate(
             [system, rng.integers(0, cfg.vocab_size, size=(n,))])
-        eng.submit(rid, prompt, max_new=args.max_new, frames=frames)
+        eng.submit(rid, prompt, max_new=args.max_new, frames=frames,
+                   images=images)
 
     t0 = time.time()
     results = eng.run()
@@ -195,6 +216,15 @@ def main():
               f"{st['preemptions']} preemptions, "
               f"{st['cow_copies']} CoW copies, "
               f"{st['prefix_evictions']} evictions")
+    if spec is not None:
+        drafted = st.get("spec_drafted", 0)
+        accepted = st.get("spec_accepted", 0)
+        per_step = ((st["decode_tokens"] - st["prefills"])
+                    / max(st.get("decode_slot_steps", 0), 1))
+        print(f"  spec: k={args.spec_k} drafter={args.drafter}, "
+              f"{accepted}/{drafted} drafts accepted "
+              f"({accepted / max(drafted, 1):.2f}), "
+              f"{per_step:.2f} accepted tokens/decode step")
     for rid in sorted(results):
         r = results[rid]
         print(f"  req {rid}{'' if r.done else ' [truncated]'}: {r.out}")

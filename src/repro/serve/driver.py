@@ -174,6 +174,11 @@ class AsyncDriver:
         # previous engine-counter readings for per-step chunk telemetry
         self._prev_pf_tokens = 0
         self._prev_decode_tokens = 0
+        # ... and for speculative-decode telemetry (independent set so
+        # the two observers never couple through a shared counter)
+        self._prev_spec = {"spec_drafted": 0, "spec_accepted": 0,
+                           "decode_tokens": 0, "prefills": 0,
+                           "decode_slot_steps": 0}
         if start:
             self.start()
 
@@ -240,7 +245,7 @@ class AsyncDriver:
 
     # ------------------------------------------------------------ submit
     def submit(self, prompt, max_new: int = 16, *, rid: Optional[int] = None,
-               frames=None, priority: int = 0,
+               frames=None, images=None, priority: int = 0,
                deadline_s: Optional[float] = None) -> TokenStream:
         """Thread-safe submission; returns the request's TokenStream.
         Validation failures (bad prompt/pool bounds) raise the engine's
@@ -257,7 +262,7 @@ class AsyncDriver:
                 raise ValueError(f"request {rid} already in flight")
             self._next_rid = max(self._next_rid, rid + 1)
             req = self._engine_submit(rid, prompt, max_new, frames=frames,
-                                      priority=priority,
+                                      images=images, priority=priority,
                                       deadline_s=deadline_s)
             stream = TokenStream(rid)
             self._streams[rid] = stream
@@ -268,10 +273,11 @@ class AsyncDriver:
         return stream
 
     def _engine_submit(self, rid, prompt, max_new, *, frames, priority,
-                       deadline_s=None):
+                       images=None, deadline_s=None):
         """Submit to either backend and return the Request record."""
         ret = self.engine.submit(rid, prompt, max_new, frames=frames,
-                                 priority=priority, deadline_s=deadline_s)
+                                 images=images, priority=priority,
+                                 deadline_s=deadline_s)
         if isinstance(ret, int):       # ReplicaRouter returns the replica
             return self.engine.engines[ret].queue[-1]
         return ret
@@ -341,6 +347,7 @@ class AsyncDriver:
         if self._stall_fired.is_set():
             self._recover()
         self._observe_chunking()
+        self._observe_spec()
         self._drain_tokens(now)
         self.metrics.queue_depth.set(
             sum(len(e.queue) for e in self._engines()))
@@ -365,6 +372,33 @@ class AsyncDriver:
             self.metrics.prefill_chunk.observe(dpf)
             self.metrics.prefill_frac.observe(dpf / (dpf + ddec))
 
+    def _observe_spec(self):
+        """Speculative-decode telemetry (same delta-vs-previous pattern
+        as :meth:`_observe_chunking`, its own counter set): export the
+        drafted/accepted totals, the cumulative accept-rate gauge, and a
+        tokens-per-decode-slot-step sample — decode tokens MINUS
+        prefill-sampled first tokens over the step's (step, decoding
+        slot) pair count, exactly 1.0 without speculation regardless of
+        occupancy, so the >1.0 signal isolates what speculation bought."""
+        if not any(getattr(e, "spec", None) is not None
+                   for e in self._engines()):
+            return
+        st = self.engine.stats
+        cur = {k: st.get(k, 0) for k in self._prev_spec}
+        d = {k: max(0, cur[k] - self._prev_spec[k]) for k in cur}
+        self._prev_spec = cur
+        if d["spec_drafted"]:
+            self.metrics.spec_drafted.inc(d["spec_drafted"])
+        if d["spec_accepted"]:
+            self.metrics.spec_accepted.inc(d["spec_accepted"])
+        if cur["spec_drafted"] > 0:
+            self.metrics.spec_accept_rate.set(
+                cur["spec_accepted"] / cur["spec_drafted"])
+        if d["decode_slot_steps"] >= 1:
+            self.metrics.spec_tokens_per_step.observe(
+                (d["decode_tokens"] - d["prefills"])
+                / d["decode_slot_steps"])
+
     def _drain_tokens(self, now: float):
         """Push every token the last step appended to its stream and
         record TTFT/TPOT; close out completed (or deadline-expired)
@@ -373,9 +407,10 @@ class AsyncDriver:
             req = self._requests[rid]
             fresh = len(req.out) - stream.emitted
             if fresh > 0:
-                # the step appends at most one token per request; a
-                # multi-token gap (catch-up after deferred start) spreads
-                # the interval evenly across its tokens
+                # a step may append several tokens per request (catch-up
+                # after deferred start, speculative accepts); spreading
+                # the interval evenly across them keeps TPOT truthful —
+                # the wall time really was shared by the whole group
                 gap = now - self._last_tok_t.get(
                     rid, self._submit_t[rid])
                 for _ in range(fresh):

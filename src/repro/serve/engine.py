@@ -170,8 +170,9 @@ from repro.serve.step import (pack_token_budget, page_bucket,
 
 #: archs the token-only engine can serve without per-request extras.
 TOKEN_ONLY_ARCHS = ("dense", "moe", "ssm", "hybrid")
-#: + enc-dec audio, whose requests carry stubbed frame embeddings.
-SERVABLE_ARCHS = TOKEN_ONLY_ARCHS + ("audio",)
+#: + enc-dec audio (stubbed frame embeddings) and VLM (stubbed image
+#: patch embeddings) — each request carries its modality tensor.
+SERVABLE_ARCHS = TOKEN_ONLY_ARCHS + ("audio", "vlm")
 #: archs whose decode cache can use the paged (block-table) layout.
 PAGEABLE_ARCHS = ("dense", "moe", "audio")
 
@@ -191,6 +192,7 @@ class Request:
     out: List[int] = field(default_factory=list)
     done: bool = False
     frames: Optional[np.ndarray] = None   # (enc_ctx, d_model), audio archs
+    images: Optional[np.ndarray] = None   # (n_img_tok, d_model), vlm archs
     priority: int = 0                  # scheduler hint (serve/scheduler.py)
     deadline: Optional[float] = None   # absolute time.monotonic() SLO bound
     expired: bool = False              # deadline passed while queued
@@ -210,7 +212,7 @@ class ServeEngine:
                  prefix_cache: bool = False, lazy: bool = False,
                  scheduler=None, mesh=None, strategy=None,
                  mixed: Optional[bool] = None, chunk_tokens: int = 256,
-                 attn_backend: str = "gather"):
+                 attn_backend: str = "gather", spec=None):
         if cfg.arch_type not in SERVABLE_ARCHS:
             raise ValueError(
                 f"{cfg.name}: the engine drives token/frame decoders "
@@ -284,6 +286,34 @@ class ServeEngine:
         # ssm/hybrid decode paths are untouched
         self._attn_kw = {} if attn_backend == "gather" \
             else {"attn_backend": attn_backend}
+        # -------- speculative multi-token decode (PR 9): a SpecConfig
+        # turns each decoding slot's one row into 1 + k rows of the SAME
+        # mixed program — drafted tokens at consecutive positions,
+        # verified in one dispatch, longest greedy-matching prefix
+        # accepted (+1 bonus). serve/speculative.py holds the drafters.
+        self.spec = spec
+        self._drafter = None
+        if spec is not None:
+            if not mixed:
+                raise ValueError(
+                    f"{cfg.name}: speculative decode packs draft rows "
+                    "into the mixed token-slot step; it needs the paged "
+                    "layout with mixed=True (the default there)")
+            if temperature > 0.0:
+                raise ValueError(
+                    "speculative decode is greedy-only (temperature "
+                    f"0.0, got {temperature}): acceptance compares the "
+                    "verifier's argmax tokens — stochastic speculative "
+                    "sampling is a different acceptance rule")
+            if chunk_tokens < max(slots, 1) * (spec.k + 1):
+                raise ValueError(
+                    f"chunk_tokens ({chunk_tokens}) must be >= slots * "
+                    f"(spec.k + 1) = {slots * (spec.k + 1)}: every "
+                    "slot's base decode row plus its k draft rows is "
+                    "reserved in the budget before any prefill chunk")
+            from repro.serve.speculative import make_drafter
+            self._drafter = make_drafter(spec, cfg, max_len=max_len,
+                                         seed=seed)
         # -------- intra-operator (TP) sharding: mesh + logical-axis rules
         self.mesh = mesh
         self.tp = int(mesh.shape.get("model", 1)) if mesh is not None else 1
@@ -339,6 +369,18 @@ class ServeEngine:
                       # runs the encoder as its own small program)
                       "prefill_chunk_tokens": 0, "expired": 0,
                       "encode_traces": 0,
+                      # speculative decode (PR 9): drafted tokens packed
+                      # as verify rows, and how many the verifier
+                      # accepted (bonus tokens are ordinary decode
+                      # tokens, not counted here) — accept rate is
+                      # spec_accepted / spec_drafted;
+                      # decode_slot_steps counts (step, decoding slot)
+                      # pairs — the honest denominator for tokens-per-
+                      # step: (decode_tokens - prefills) over it is
+                      # exactly 1.0 without speculation and in
+                      # [1, k + 1] with it, slot count notwithstanding
+                      "spec_drafted": 0, "spec_accepted": 0,
+                      "decode_slot_steps": 0,
                       # which paged-attention path the decode program
                       # runs (PR 8); a string — metrics render it as a
                       # labeled serve_engine_decode_backend info gauge
@@ -573,7 +615,8 @@ class ServeEngine:
 
     # --------------------------------------------------------- scheduling
     def submit(self, rid: int, prompt: np.ndarray, max_new: int, *,
-               frames: Optional[np.ndarray] = None, priority: int = 0,
+               frames: Optional[np.ndarray] = None,
+               images: Optional[np.ndarray] = None, priority: int = 0,
                deadline_s: Optional[float] = None):
         """Queue a request. Rejects inputs the engine can NEVER hold —
         prompts at/over ``max_len`` and, on the paged layout, requests
@@ -652,6 +695,22 @@ class ServeEngine:
             raise ValueError(
                 f"request {rid}: frames are only meaningful for audio "
                 f"archs, not {self.cfg.arch_type}")
+        if self.cfg.arch_type == "vlm":
+            if images is None:
+                raise ValueError(
+                    f"request {rid}: {self.cfg.name} is a VLM arch; "
+                    "submit(..., images=(num_image_tokens, d_model)) "
+                    "patch embeddings (the stubbed vision frontend's "
+                    "output)")
+            images = np.asarray(images, np.float32)
+            want = (self.cfg.num_image_tokens, self.cfg.d_model)
+            if images.shape != want:
+                raise ValueError(
+                    f"request {rid}: images shape {images.shape} != {want}")
+        elif images is not None:
+            raise ValueError(
+                f"request {rid}: images are only meaningful for vlm "
+                f"archs, not {self.cfg.arch_type}")
         deadline = None
         if deadline_s is not None:
             if deadline_s <= 0:
@@ -660,7 +719,8 @@ class ServeEngine:
                     f"{deadline_s}")
             deadline = time.monotonic() + float(deadline_s)
         req = Request(rid, prompt, int(max_new), frames=frames,
-                      priority=int(priority), deadline=deadline)
+                      images=images, priority=int(priority),
+                      deadline=deadline)
         self.queue.append(req)
         return req
 
@@ -845,8 +905,11 @@ class ServeEngine:
                 self._sync_ptab()
             padded = np.zeros(blen, np.int32)
             padded[:n] = ctx
-            extra = {} if req.frames is None else \
-                {"frames": self._dev(req.frames[None])}
+            extra = {}
+            if req.frames is not None:
+                extra["frames"] = self._dev(req.frames[None])
+            if req.images is not None:
+                extra["image_embeds"] = self._dev(req.images[None])
             with self._ctx():
                 tok, self._cache = self._prefill(
                     self.params, self._cache, self._dev(padded[None]), extra,
@@ -1123,6 +1186,54 @@ class ServeEngine:
             if blk < len(own) and self._alloc.refcount(own[blk]) > 1:
                 self._cow_reclaiming(s, blk)
 
+    # ------------------------------------------------ speculative decode
+    def _propose_drafts(self, decode_slots):
+        """Ask the drafter for up to ``spec.k`` continuation tokens per
+        decoding slot and reserve the pages their KV writes need.
+
+        ``k_s`` is clamped so every drafted position stays inside the
+        request's own remaining budget (``max_new``) and the context cap
+        — which keeps the write positions inside the worst-case
+        reservation submit() pre-booked in ``_hw_blocks``, so drafting
+        NEVER re-buckets the bounded gather (trace count stays one per
+        (token budget, page bucket), speculation on or off). Under lazy
+        growth the reservation is extended to cover the draft writes up
+        front with a PLAIN extend — speculation is opportunistic and
+        must never evict prefix blocks or preempt a neighbour to place
+        a guess, so a dry pool just truncates the draft (the rejection
+        path returns these pages via ``PageAllocator.rollback``). Eager
+        reservations already hold the worst case and are never touched.
+        """
+        drafts = {}
+        for s in decode_slots:
+            req = self.active[s]
+            P = int(self._pos[s])
+            k_s = min(self.spec.k, req.max_new - len(req.out) - 1,
+                      self.max_len - 1 - P)
+            if k_s < 1:
+                continue
+            ctx = np.concatenate(
+                [req.prompt, np.asarray(req.out, np.int64)])
+            d = np.asarray(self._drafter.propose(ctx, k_s),
+                           np.int64).reshape(-1)[:k_s]
+            if len(d) and self.lazy:
+                if self._alloc.extend(s, P + 1 + len(d)) is None:
+                    # pool dry: keep only the drafts whose writes fit
+                    # the pages already held (possibly none)
+                    room = (len(self._alloc.pages_of(s)) * self.page_size
+                            - P - 1)
+                    d = d[:max(room, 0)]
+                    if len(d):
+                        self._alloc.extend(s, P + 1 + len(d))
+                if len(d):
+                    own = self._alloc.pages_of(s)
+                    self._ptab[s, :len(own)] = own
+                    self._ptab_dirty = True
+                    self._note_pool()
+            if len(d):
+                drafts[s] = d
+        return drafts
+
     def release_prefix_cache(self) -> int:
         """Flush every prefix block no live request still shares, freeing
         their pages. Returns the number of blocks evicted."""
@@ -1164,6 +1275,7 @@ class ServeEngine:
                     self._dev(self._pos.astype(np.int32)), self._dev(mask),
                     self._next_rng())
             self.stats["decode_steps"] += 1
+            self.stats["decode_slot_steps"] += int(mask.sum())
             toks = np.asarray(tok)
             for s in range(self.slots):
                 req = self.active[s]
@@ -1232,13 +1344,16 @@ class ServeEngine:
                     st["dep"] = None
         decode_slots = [s for s in range(self.slots)
                         if self.active[s] is not None and s not in self._pf]
+        drafts = self._propose_drafts(decode_slots) \
+            if self._drafter is not None else {}
         pkey = getattr(self._sched, "prefill_key", None)
         items = sorted(
             self._pf.items(),
             key=lambda kv: ((pkey(self.active[kv[0]])
                              if pkey is not None else ()), kv[1]["seq"]))
         allot = pack_token_budget(
-            self.chunk_tokens, len(decode_slots),
+            self.chunk_tokens,
+            [1 + len(drafts.get(s, ())) for s in decode_slots],
             [{"slot": s, "cursor": st["cursor"], "n": st["n"],
               "dep": st["dep"]} for s, st in items])
         if not decode_slots and not allot:
@@ -1251,13 +1366,33 @@ class ServeEngine:
         active = np.zeros(T, bool)
         wnull = np.ones(T, bool)      # pads write to the null page
         r = 0
+        base_row: Dict[int, int] = {}
+        draft_rows: Dict[int, List[int]] = {}
         for s in decode_slots:
             tokens[r, 0] = self._last[s]
             pos[r] = self._pos[s]
             slot_v[r] = s
             active[r] = True
             wnull[r] = False
+            base_row[s] = r
             r += 1
+            # speculative draft rows: same slot, consecutive positions.
+            # Draft row i carries drafted token d[i] at position P+1+i;
+            # its logits are the verifier's token for position P+2+i —
+            # valid exactly when d[0..i] all matched (the accept loop's
+            # prefix rule). KV order is exact: _mixed_fn scatters EVERY
+            # row's K/V before the attention gathers, and a row at
+            # position p attends to kv_len p+1, so the base row never
+            # sees draft KV while draft row i sees the base write and
+            # drafts 0..i-1.
+            for i, t in enumerate(drafts.get(s, ())):
+                tokens[r, 0] = t
+                pos[r] = self._pos[s] + 1 + i
+                slot_v[r] = s
+                active[r] = True
+                wnull[r] = False
+                draft_rows.setdefault(s, []).append(r)
+                r += 1
         emit_row: Dict[int, int] = {}
         for s, start, count in allot:
             st = self._pf[s]
@@ -1284,20 +1419,52 @@ class ServeEngine:
         toks = np.asarray(tok)
         if decode_slots:
             self.stats["decode_steps"] += 1
-        for r, s in enumerate(decode_slots):
+            self.stats["decode_slot_steps"] += len(decode_slots)
+        for s in decode_slots:
             req = self.active[s]
-            t = int(toks[r])
-            req.out.append(t)
-            self._pos[s] += 1
-            self._last[s] = t
-            self.stats["decode_tokens"] += 1
-            if self._prefix is not None and \
-                    self._pos[s] % self.page_size == 0:
-                self._register_decode_block(s, req)
-            hit_eos = self.eos_id is not None and t == self.eos_id
-            if len(req.out) >= req.max_new or hit_eos or \
-                    self._pos[s] >= self.max_len:
-                self._retire(s)
+            d = drafts.get(s, ())
+            # greedy acceptance: the base row's argmax is ALWAYS the true
+            # next token (bit-identical to non-speculative decode); draft
+            # i's logits are valid iff d[0..i] matched the chain so far,
+            # so accept the longest matching prefix plus the verifier's
+            # one bonus token after it.
+            accepted = [int(toks[base_row[s]])]
+            m = 0
+            while m < len(d) and int(d[m]) == accepted[-1]:
+                accepted.append(int(toks[draft_rows[s][m]]))
+                m += 1
+            self.stats["spec_drafted"] += len(d)
+            self.stats["spec_accepted"] += m
+            # consume token-by-token, exactly mirroring the non-spec
+            # epilogue: max_new / EOS / capacity stop the chain mid-draft
+            # (output length stays min(max_new, tokens-until-EOS)).
+            for t in accepted:
+                req.out.append(t)
+                self._pos[s] += 1
+                self._last[s] = t
+                self.stats["decode_tokens"] += 1
+                if self._prefix is not None and \
+                        self._pos[s] % self.page_size == 0:
+                    self._register_decode_block(s, req)
+                hit_eos = self.eos_id is not None and t == self.eos_id
+                if len(req.out) >= req.max_new or hit_eos or \
+                        self._pos[s] >= self.max_len:
+                    self._retire(s)
+                    break
+            if self.lazy and len(d) and self.active[s] is req:
+                # rejection rollback: drop draft pages beyond the
+                # accepted cursor (retired slots already freed all pages)
+                # and restore the lazy invariant _len == pos; the freed
+                # tail is always this step's extend-fresh private pages,
+                # so shared/prefix pages are never touched. The stale KV
+                # inside kept pages is invisible (kv_len masks by pos)
+                # and overwritten before the cursor passes it.
+                dropped = self._alloc.rollback(s, int(self._pos[s]))
+                if dropped:
+                    w = len(self._alloc.pages_of(s))
+                    self._ptab[s, w:w + len(dropped)] = 0
+                    self._ptab_dirty = True
+                self._note_pool()
         ps = self.page_size
         for s, start, count in allot:
             st = self._pf[s]

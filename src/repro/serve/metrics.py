@@ -49,8 +49,22 @@ Metric glossary (the names ``GET /metrics`` exposes):
   ``serve_tokens_streamed_total``     counter streamed tokens (all requests)
   ``serve_watchdog_fired_total``      counter stalled-step detections
   ``serve_watchdog_requeued_total``   counter requests requeued by recovery
+  ``serve_spec_drafted_total``        counter speculative tokens drafted
+                                              (verify rows packed into
+                                              mixed steps)
+  ``serve_spec_accepted_total``       counter drafted tokens the verifier
+                                              accepted (greedy prefix
+                                              match; bonus tokens not
+                                              counted — they are ordinary
+                                              decode output)
   ``serve_queue_depth``             gauge     queued requests right now
   ``serve_active_slots``            gauge     occupied slots right now
+  ``serve_spec_accept_rate``        gauge     cumulative accepted/drafted
+                                              (0 until something drafts)
+  ``serve_spec_tokens_per_step``    summary   decode tokens emitted per
+                                              decode step (prefill-sampled
+                                              first tokens excluded);
+                                              > 1.0 is speculation paying
   ``serve_engine_<stat>``           gauge     every numeric ``engine.stats``
                                               field (pages_in_use,
                                               peak_pages, prefix_* ,
@@ -323,6 +337,19 @@ class ServeMetrics:
         self.watchdog_requeued = r.counter(
             "serve_watchdog_requeued_total",
             "Requests cancelled-and-requeued by watchdog recovery")
+        self.spec_drafted = r.counter(
+            "serve_spec_drafted_total",
+            "Speculative tokens drafted (verify rows packed)")
+        self.spec_accepted = r.counter(
+            "serve_spec_accepted_total",
+            "Drafted tokens the verifier accepted")
+        self.spec_accept_rate = r.gauge(
+            "serve_spec_accept_rate",
+            "Cumulative speculative accept rate (accepted / drafted)")
+        self.spec_tokens_per_step = r.histogram(
+            "serve_spec_tokens_per_step",
+            "Decode tokens emitted per decode step under speculation",
+            window=window)
         self.queue_depth = r.gauge(
             "serve_queue_depth", "Requests queued right now")
         self.active_slots = r.gauge(

@@ -39,6 +39,12 @@ reference model, plus the hypothesis-free twin in tests/test_serve_paged.py):
 ``extend`` on an unknown owner raises ``KeyError`` (it is a lookup error,
 not a value error — and must never mint a fresh owner entry).
 
+``rollback(owner, n_tokens)`` is ``extend``'s inverse for speculative
+decode: tail pages beyond ``ceil(n_tokens / page_size)`` are released
+(one reference each) and the owner's token length drops — the engine
+calls it when the verifier rejects drafted tokens whose pages were
+reserved optimistically.
+
 Page id 0 is conventionally the NULL page (scratch rows for inactive
 slots and bucket padding); construct with ``first_page=1`` to keep it out
 of circulation.
@@ -184,6 +190,34 @@ class PageAllocator:
         self._len[owner] = n_tokens
         self._peak_owner = max(self._peak_owner, len(self._owned[owner]))
         return fresh
+
+    def rollback(self, owner: Hashable, n_tokens: int) -> List[int]:
+        """Shrink ``owner``'s reservation back to cover ``n_tokens``
+        total — the speculative-decode rejection path: draft pages
+        reserved for tokens the verifier rejected are returned, tail
+        first. Drops one reference per released tail page (a shared
+        page stays live for its other holders) and returns the pages
+        removed from the owner's table ([] when the reservation already
+        fits) so the engine can null their page-table entries. Unlike
+        ``free`` this never releases pages the accepted context still
+        needs; unlike ``extend`` it may lower the owner's token length
+        (``extend``'s no-shrink rule guards against accidental loss —
+        rollback IS the deliberate loss). ``peak_owner_pages`` stays
+        monotone: the bounded-gather bucket never shrinks mid-decode."""
+        if owner not in self._owned:
+            raise KeyError(f"owner {owner!r} holds no pages")
+        if n_tokens > self._len[owner]:
+            raise ValueError(
+                f"owner {owner!r}: rollback to {n_tokens} tokens exceeds "
+                f"the {self._len[owner]}-token reservation (use extend)")
+        pages = self._owned[owner]
+        keep = pages_for(n_tokens, self.page_size)
+        dropped = pages[keep:]
+        del pages[keep:]
+        for p in dropped:
+            self._drop(p)
+        self._len[owner] = n_tokens
+        return dropped
 
     def cow(self, owner: Hashable, block: int) -> Optional[int]:
         """Copy-on-write: give ``owner`` a PRIVATE page at table index

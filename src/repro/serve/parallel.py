@@ -143,7 +143,7 @@ class ReplicaRouter:
         return best
 
     def submit(self, rid: int, prompt, max_new: int, *,
-               frames=None, priority: int = 0,
+               frames=None, images=None, priority: int = 0,
                deadline_s: Optional[float] = None) -> int:
         """Route and enqueue one request; returns the replica index it
         landed on. Validation (prompt/pool bounds) is the target
@@ -153,7 +153,8 @@ class ReplicaRouter:
                              f"(to replica {self._home[rid]})")
         r = self.route(prompt)
         self.engines[r].submit(rid, prompt, max_new, frames=frames,
-                               priority=priority, deadline_s=deadline_s)
+                               images=images, priority=priority,
+                               deadline_s=deadline_s)
         self._home[rid] = r
         key = self._affinity_key(np.asarray(prompt, np.int32).reshape(-1))
         if key is not None and key not in self._affine:

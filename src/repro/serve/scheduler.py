@@ -45,6 +45,15 @@ Two policies ship:
 
 Victim candidates are ``(slot, progress, priority)`` triples; policies
 that ignore priority just read the first two fields.
+
+Under SPECULATIVE decode (``ServeEngine(spec=...)``) every decoding
+slot's drafted rows count against the mixed step's ``chunk_tokens``
+budget ahead of any prefill chunk — the engine reserves ``1 + k_s`` rows
+per slot (base decode row plus its drafts) before ``prefill_key``
+ordering shares out what remains, so speculation can narrow prefill
+chunks but never displace a decode row (the same decode-first contract
+``serve/step.pack_token_budget`` enforces, now with per-slot row
+counts).
 """
 from __future__ import annotations
 

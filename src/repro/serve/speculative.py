@@ -1,0 +1,201 @@
+"""Speculative multi-token decode: self-drafting over the mixed step.
+
+Decode throughput is bounded by ONE memory-bound program per token — the
+inference wall the survey's §5 case-studies keep hitting. Speculative
+decoding restructures the schedule instead of the kernel: a cheap DRAFTER
+guesses the next ``k`` tokens, the real model VERIFIES all of them in a
+single dispatch, and the greedy-matching prefix is accepted — plus one
+"bonus" token the verifier's own logits supply for free. Each step then
+yields between 1 (all drafts rejected: exactly the non-speculative token)
+and ``k + 1`` tokens for one program launch, and greedy output is
+BIT-IDENTICAL to non-speculative decode by construction: every emitted
+token is an argmax of the verifier's logits at its own position.
+
+The PR 7 mixed token-slot step was built to host this: its (T, 1) batch
+already carries per-row ``pos``/``slot`` tags, so drafted tokens are just
+EXTRA ROWS with the same slot id at consecutive positions — no new
+program, no new trace shape (the batch stays statically ``chunk_tokens``
+wide). Rejection rollback is page-table bookkeeping: the engine truncates
+the slot's reservation back to its accepted cursor
+(``PageAllocator.rollback``) and the stale KV beyond it is invisible
+(attention masks by ``pos``) and overwritten before it could ever be
+gathered.
+
+Two SELF-speculative drafters ship — neither needs a second model:
+
+  * :class:`NgramDrafter` (``drafter="ngram"``, the default) — prompt
+    lookup: match the longest recent n-gram of the slot's context
+    (prompt + generated) against its OWN earlier tokens and propose the
+    continuation of the most recent match. Free, and strong exactly
+    where speculation pays: repetitive text (code, templated prose,
+    retrieval-stuffed prompts). No match -> no draft rows -> plain
+    one-token decode, so it can never be slower than k=0 by more than
+    the host-side lookup.
+  * :class:`DraftModelDrafter` (``drafter="model"``) — a small greedy
+    dense model proposes the continuation. Runs its own (bucketed, so
+    trace-bounded) forward over the context; accepted wherever its
+    argmax agrees with the verifier's. Pass ``draft_cfg``/
+    ``draft_params`` (e.g. a trained tiny config); omitted params are
+    freshly initialized, which demonstrates the plumbing but drafts at
+    chance level.
+
+Correctness does not depend on the drafter: a bad draft costs budget
+rows, never tokens. ``SpecConfig`` is accepted by ``ServeEngine(spec=)``
+/ ``Session.serve(spec=)`` and requires the mixed step (paged layout)
+and greedy sampling (``temperature == 0`` — acceptance compares argmax
+tokens; stochastic speculative sampling is a different acceptance rule).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Optional
+
+import numpy as np
+
+DRAFTERS = ("ngram", "model")
+
+
+@dataclass(frozen=True)
+class SpecConfig:
+    """Speculative-decode knobs for ``ServeEngine(spec=...)``.
+
+    ``k`` drafted tokens are verified per slot per step (the engine
+    packs ``k + 1`` rows — draft rows plus the slot's base decode row —
+    so ``chunk_tokens`` must cover ``slots * (k + 1)``). ``ngram_min`` /
+    ``ngram_max`` bound the n-gram match length of the prompt-lookup
+    drafter (longest first). ``draft_cfg``/``draft_params``/
+    ``draft_seed`` configure the small-model drafter; ``draft_cfg=None``
+    with ``drafter="model"`` derives a 1-layer dense config over the
+    verifier's vocab, and ``draft_params=None`` initializes it fresh
+    from ``draft_seed``.
+    """
+    k: int = 4
+    drafter: str = "ngram"
+    ngram_min: int = 1
+    ngram_max: int = 4
+    draft_cfg: Optional[object] = None       # ModelConfig for "model"
+    draft_params: Optional[object] = None    # param tree for "model"
+    draft_seed: int = 0
+
+    def __post_init__(self):
+        if self.k < 1:
+            raise ValueError(f"spec.k must be >= 1, got {self.k}")
+        if self.drafter not in DRAFTERS:
+            raise ValueError(
+                f"spec.drafter must be one of {'/'.join(DRAFTERS)}, "
+                f"got {self.drafter!r}")
+        if not 1 <= self.ngram_min <= self.ngram_max:
+            raise ValueError(
+                f"need 1 <= ngram_min <= ngram_max, got "
+                f"{self.ngram_min}/{self.ngram_max}")
+
+
+class NgramDrafter:
+    """Prompt-lookup drafting: propose the continuation of the most
+    recent earlier occurrence of the context's longest trailing n-gram.
+
+    ``propose(ctx, k)`` takes the slot's full known token sequence
+    (prompt + every generated token, the pending one included) and
+    returns up to ``k`` drafted continuation tokens — possibly EMPTY
+    (no n-gram of length >= ``ngram_min`` recurs), in which case the
+    engine packs a plain one-row decode for the slot. Longest n-gram
+    first (``ngram_max`` down to ``ngram_min``), most recent match
+    wins: repetitive contexts draft their own loop body.
+    """
+
+    def __init__(self, *, ngram_min: int = 1, ngram_max: int = 4):
+        if not 1 <= ngram_min <= ngram_max:
+            raise ValueError(f"need 1 <= ngram_min <= ngram_max, got "
+                             f"{ngram_min}/{ngram_max}")
+        self.ngram_min = ngram_min
+        self.ngram_max = ngram_max
+
+    def propose(self, ctx: np.ndarray, k: int) -> np.ndarray:
+        ctx = np.asarray(ctx).reshape(-1)
+        n = len(ctx)
+        for g in range(min(self.ngram_max, n - 1), self.ngram_min - 1, -1):
+            tail = ctx[n - g:]
+            # most recent earlier occurrence with at least one
+            # continuation token to propose
+            for i in range(n - g - 1, -1, -1):
+                if np.array_equal(ctx[i:i + g], tail):
+                    cont = ctx[i + g:i + g + k]
+                    return np.asarray(cont, np.int64)
+        return np.zeros((0,), np.int64)
+
+
+class DraftModelDrafter:
+    """Greedy small-model drafting: a separate (tiny, dense) model
+    proposes the next ``k`` tokens by its own argmax.
+
+    The draft forward runs over the context padded to a power-of-two
+    bucket (``serve/step.prefill_bucket``), so the drafter retraces at
+    most log2(max_len) shapes regardless of context length — the same
+    bounded-trace discipline as the verifier. Causal attention makes
+    tail padding invisible to every real position, so one buffer serves
+    all ``k`` proposal steps at one trace: token ``i``'s draft is the
+    argmax at position ``len(ctx) - 1 + i`` after writing the previous
+    drafts into the buffer.
+    """
+
+    def __init__(self, cfg, params=None, *, max_len: int = 256, seed: int = 0):
+        import jax
+
+        from repro.models import get_model
+
+        if cfg.arch_type != "dense":
+            raise ValueError(
+                f"{cfg.name}: the draft model must be a dense decoder "
+                f"(row-independent greedy argmax), not {cfg.arch_type}")
+        self.cfg = cfg
+        self.max_len = int(max_len)
+        self.model = get_model(cfg)
+        self.params = params if params is not None \
+            else self.model.init(jax.random.key(seed), cfg)
+        self._fwd = jax.jit(
+            lambda p, t: self.model.forward(p, {"tokens": t}, cfg)[0])
+
+    def propose(self, ctx: np.ndarray, k: int) -> np.ndarray:
+        from repro.serve.step import prefill_bucket
+
+        ctx = np.asarray(ctx).reshape(-1)
+        n = len(ctx)
+        k = min(int(k), self.max_len - n)
+        if k <= 0:
+            return np.zeros((0,), np.int64)
+        b = prefill_bucket(n + k, cap=self.max_len)
+        buf = np.zeros((1, b), np.int32)
+        buf[0, :n] = ctx
+        out = []
+        for i in range(k):
+            logits = np.asarray(self._fwd(self.params, buf))
+            t = int(np.argmax(logits[0, n - 1 + i]))
+            out.append(t)
+            if n + i < b:
+                buf[0, n + i] = t
+        return np.asarray(out, np.int64)
+
+
+def make_drafter(spec: SpecConfig, cfg, *, max_len: int, seed: int = 0):
+    """Build the drafter a :class:`SpecConfig` names. ``cfg`` is the
+    VERIFIER's config — the "model" drafter derives its default tiny
+    draft config from it (1 dense layer over the same vocab) when
+    ``spec.draft_cfg`` is omitted."""
+    if spec.drafter == "ngram":
+        return NgramDrafter(ngram_min=spec.ngram_min,
+                            ngram_max=spec.ngram_max)
+    draft_cfg = spec.draft_cfg
+    if draft_cfg is None:
+        from repro.configs.base import ModelConfig
+        draft_cfg = ModelConfig(
+            name=f"{cfg.name}-draft", arch_type="dense", num_layers=1,
+            d_model=64, num_heads=2, num_kv_heads=2, d_ff=128,
+            vocab_size=cfg.vocab_size, dtype="float32")
+    if draft_cfg.vocab_size < cfg.vocab_size:
+        raise ValueError(
+            f"draft model vocab {draft_cfg.vocab_size} < verifier vocab "
+            f"{cfg.vocab_size}: the drafter could never propose every "
+            "token")
+    return DraftModelDrafter(draft_cfg, spec.draft_params,
+                             max_len=max_len,
+                             seed=seed + spec.draft_seed)

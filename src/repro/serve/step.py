@@ -48,9 +48,18 @@ def page_bucket(n_blocks: int, *, cap: int) -> int:
     return min(cap, 1 << (n_blocks - 1).bit_length())
 
 
-def pack_token_budget(budget: int, n_decode: int, prefill_items):
+def pack_token_budget(budget: int, decode_rows, prefill_items):
     """Fill one mixed step's token budget: decode first, then prefill
     chunks in the given order (the scheduler's priority order).
+
+    ``decode_rows`` is either the total decode row count (the classic
+    one-row-per-slot step) or a sequence of PER-SLOT row counts — the
+    speculative-decode hook: a slot verifying ``k`` drafted tokens
+    occupies ``1 + k`` rows (its base decode row plus the draft rows),
+    and every one of them is reserved ahead of prefill. Only the sum
+    matters to the packing; the sequence form exists so callers state
+    per-slot demand directly and the property tests can pin that drafted
+    rows are never displaced.
 
     ``prefill_items`` are dicts with ``slot``, ``cursor`` (prompt tokens
     already prefilled), ``n`` (total prompt tokens) and optional ``dep``
@@ -62,12 +71,14 @@ def pack_token_budget(budget: int, n_decode: int, prefill_items):
     attends (serve/engine._mixed_fn).
 
     Returns ``[(slot, start, count), ...]`` with ``count >= 1``,
-    ``sum(count) <= budget - n_decode``. Decode tokens are reserved
-    FIRST — prefill never displaces a decode slot — and a step whose
+    ``sum(count) <= budget - sum(decode_rows)``. Decode (and draft) rows
+    are reserved FIRST — prefill never displaces them — and a step whose
     decode demand alone exceeds the budget is a sizing bug, so it
     raises. Pure host logic; the hypothesis suite in
     tests/test_serve_mixed.py drives it across random mixes.
     """
+    n_decode = decode_rows if isinstance(decode_rows, int) \
+        else sum(decode_rows)
     if n_decode > budget:
         raise ValueError(
             f"decode demand {n_decode} exceeds the token budget {budget}; "

@@ -19,8 +19,10 @@ requests. The contract pinned here:
   * TTFT is stamped when the FIRST token is appended, so a request that
     finishes at admission still gets a real first-token time;
   * ``pack_token_budget`` accounting (hypothesis): every prompt token is
-    allotted exactly once, no step exceeds the budget, decode is never
-    displaced, dependents never run ahead of their donor's coverage.
+    allotted exactly once, no step exceeds the budget, decode — whether
+    an int row count or the speculative per-slot 1 + k row sequence —
+    is never displaced, dependents never run ahead of their donor's
+    coverage.
 """
 import threading
 import time
@@ -412,6 +414,20 @@ def test_pack_token_budget_rejects_oversubscribed_decode():
         pack_token_budget(4, 5, [])
 
 
+def test_pack_token_budget_per_slot_row_counts():
+    """Speculative decode reserves 1 + k rows per decoding slot: a
+    per-slot row-count sequence is exactly equivalent to its sum, and
+    oversubscription raises the same budget error."""
+    items = [{"slot": 0, "cursor": 0, "n": 12, "dep": None},
+             {"slot": 1, "cursor": 3, "n": 9, "dep": None}]
+    assert pack_token_budget(16, [5, 3], [dict(i) for i in items]) == \
+        pack_token_budget(16, 8, [dict(i) for i in items])
+    # the whole budget may go to draft rows (no prefill room left)
+    assert pack_token_budget(8, [5, 3], [dict(i) for i in items]) == []
+    with pytest.raises(ValueError, match="token budget"):
+        pack_token_budget(8, [5, 4], [])
+
+
 # hypothesis comes from the [test] extra; a bare env falls back to a
 # fixed seed sweep of the same generator so the module stays green
 try:
@@ -421,11 +437,24 @@ except ImportError:
     HAVE_HYPOTHESIS = False
 
 
+def _rows_total(n_decode):
+    """Reserved decode rows: int, or a per-slot row-count sequence (the
+    speculative 1 + k rows per slot hook)."""
+    return sum(n_decode) if isinstance(n_decode, list) else n_decode
+
+
 def _random_case(rng):
     """One random budget-accounting case (mirrors the hypothesis
     strategy, driven by numpy when hypothesis is absent)."""
     budget = int(rng.integers(1, 65))
     n_decode = int(rng.integers(0, budget))
+    if n_decode and rng.random() < 0.5:
+        # same reservation expressed per slot (draft rows included)
+        m = int(rng.integers(1, min(n_decode, 4) + 1))
+        rows = [1] * m
+        for _ in range(n_decode - m):
+            rows[int(rng.integers(0, m))] += 1
+        n_decode = rows
     items = []
     for i in range(int(rng.integers(0, 7))):
         n = int(rng.integers(1, 61))
@@ -449,8 +478,9 @@ def _check_single_step(case):
         assert count >= 1
         assert s not in by_slot               # one chunk per slot per step
         by_slot[s] = (start, count)
-    # decode reserved first: prefill never displaces a decode token
-    assert sum(c for _, _, c in allot) <= budget - n_decode
+    # decode (and per-slot draft rows) reserved first: prefill never
+    # displaces a reserved row
+    assert sum(c for _, _, c in allot) <= budget - _rows_total(n_decode)
     planned = {it["slot"]: it["cursor"] for it in items}
     for it in items:
         if it["slot"] in by_slot:
@@ -476,7 +506,7 @@ def _check_drains_exactly_once(case):
         if not live:
             break
         allot = pack_token_budget(budget, n_decode, live)
-        assert sum(c for _, _, c in allot) <= budget - n_decode
+        assert sum(c for _, _, c in allot) <= budget - _rows_total(n_decode)
         by_slot = {s: (start, count) for s, start, count in allot}
         for it in live:
             if it["slot"] in by_slot:
@@ -496,6 +526,15 @@ if HAVE_HYPOTHESIS:
     def _budget_case(draw):
         budget = draw(hst.integers(min_value=1, max_value=64))
         n_decode = draw(hst.integers(min_value=0, max_value=budget - 1))
+        if n_decode and draw(hst.booleans()):
+            # per-slot row counts (speculative draft rows), same total
+            m = draw(hst.integers(min_value=1,
+                                  max_value=min(n_decode, 4)))
+            rows = [1] * m
+            for _ in range(n_decode - m):
+                rows[draw(hst.integers(min_value=0,
+                                       max_value=m - 1))] += 1
+            n_decode = rows
         items = []
         for i in range(draw(hst.integers(min_value=0, max_value=6))):
             n = draw(hst.integers(min_value=1, max_value=60))

@@ -1,0 +1,423 @@
+"""Speculative multi-token decode (serve/speculative.py riding the mixed
+token-slot step). The contract pinned here:
+
+  * greedy outputs with ``spec=`` on are BIT-IDENTICAL to the same
+    engine with speculation off — dense (multi-slot), MoE (no-drop
+    capacity), enc-dec (frames), prefix-cache + lazy CoW sharing, both
+    paged-attention backends, and the tp2/dp2 sharded layouts — because
+    every emitted token is the verifier's own argmax at its position;
+  * the draft rows ride the EXISTING mixed program: decode_traces stays
+    bounded by (token-budget, page-bucket) shapes, spec on or off;
+  * on repetitive context the prompt-lookup drafter accepts >1 token
+    per (step, slot) — the whole point of drafting;
+  * EOS / ``max_new`` landing INSIDE an accepted draft truncate the
+    output exactly (min(max_new, tokens-until-EOS) — never a token
+    beyond the stop);
+  * rejection rollback is exact page bookkeeping: reservations shrink
+    back to the accepted cursor (``PageAllocator.rollback``), the pool
+    drains clean after the run, and drafted writes never corrupt
+    prefix-shared pages (CoW isolates the base block; draft blocks are
+    always extend-fresh private pages).
+"""
+import jax
+import numpy as np
+import pytest
+
+from repro.configs.base import ModelConfig
+from repro.models import get_model
+from repro.serve.engine import ServeEngine
+from repro.serve.paging import PageAllocator
+from repro.serve.parallel import ReplicaRouter, replica_meshes
+from repro.serve.speculative import (DraftModelDrafter, NgramDrafter,
+                                     SpecConfig)
+
+CFG = ModelConfig(name="spec-dense", arch_type="dense", num_layers=2,
+                  d_model=64, num_heads=4, num_kv_heads=2, d_ff=128,
+                  vocab_size=128, dtype="float32")
+
+# capacity_factor = E / k: no-drop dispatch — batch contents (draft rows
+# present or not) cannot perturb expert routing, so spec on/off stays
+# bit-identical (the same regime the mixed/split identity tests pin)
+MOE_CFG = ModelConfig(name="spec-moe", arch_type="moe", num_layers=2,
+                      d_model=64, num_heads=4, num_kv_heads=2, d_ff=128,
+                      num_experts=4, experts_per_token=2,
+                      moe_capacity_factor=2.0, vocab_size=128,
+                      dtype="float32")
+
+AUDIO_CFG = ModelConfig(name="spec-encdec", arch_type="audio",
+                        num_layers=2, d_model=64, num_heads=4,
+                        num_kv_heads=4, d_ff=128, vocab_size=128,
+                        encoder_layers=1, encoder_ctx=12, dtype="float32")
+
+SPEC = SpecConfig(k=4)
+
+
+def _params(cfg, seed=0):
+    return get_model(cfg).init(jax.random.key(seed), cfg)
+
+
+def _prompts(rng, cfg, lens):
+    return [rng.integers(0, cfg.vocab_size, size=(int(n),)).astype(np.int32)
+            for n in lens]
+
+
+def _repetitive_prompts(rng, cfg, n_prompts):
+    """Tiled short motifs — the prompt-lookup drafter's best case (the
+    same shape bench_serve_throughput.py --repetitive drives)."""
+    out = []
+    for _ in range(n_prompts):
+        motif = rng.integers(0, cfg.vocab_size,
+                             size=(int(rng.integers(3, 6)),))
+        out.append(np.tile(motif, int(rng.integers(4, 7)))
+                   .astype(np.int32))
+    return out
+
+
+def _serve(cfg, params, prompts, new, *, spec=None, frames=None,
+           mesh=None, **kw):
+    kw.setdefault("slots", 2)
+    kw.setdefault("max_len", 64)
+    kw.setdefault("chunk_tokens", 16)
+    eng = ServeEngine(cfg, params, mesh=mesh, paged=True, mixed=True,
+                      spec=spec, **kw)
+    for i, p in enumerate(prompts):
+        eng.submit(i, p, max_new=new,
+                   frames=None if frames is None else frames[i])
+    results = eng.run()
+    return {i: list(results[i].out) for i in results}, eng
+
+
+# ------------------------------------------------------- drafter units
+
+def test_ngram_drafter_matches_most_recent_longest():
+    d = NgramDrafter(ngram_min=1, ngram_max=4)
+    # trailing [1,2,3] recurs at the start; continuation is [4,1]
+    got = d.propose(np.array([1, 2, 3, 4, 1, 2, 3]), 2)
+    assert got.tolist() == [4, 1]
+    # most recent match wins: trailing [7] last recurs before 9
+    got = d.propose(np.array([7, 8, 7, 9, 7]), 3)
+    assert got.tolist() == [9, 7]
+    # proposal truncates at the context end and at k
+    got = d.propose(np.array([5, 6, 5]), 4)
+    assert got.tolist() == [6, 5]
+
+
+def test_ngram_drafter_no_match_is_empty():
+    d = NgramDrafter()
+    assert d.propose(np.array([1, 2, 3]), 4).size == 0
+    assert d.propose(np.array([9]), 4).size == 0
+    # ngram_min above every recurring length: no draft either
+    d2 = NgramDrafter(ngram_min=3, ngram_max=4)
+    assert d2.propose(np.array([7, 8, 7, 9, 7]), 3).size == 0
+
+
+def test_draft_model_drafter_is_own_greedy_chain():
+    """With the verifier's own params the draft model's proposals are
+    its teacher-forced greedy continuation — position i's argmax feeds
+    position i+1."""
+    params = _params(CFG)
+    d = DraftModelDrafter(CFG, params, max_len=64)
+    ctx = _prompts(np.random.default_rng(0), CFG, (7,))[0]
+    got = d.propose(ctx, 3)
+    assert got.shape == (3,)
+    # replay manually: forward over ctx + accepted drafts, argmax each
+    run = list(ctx)
+    for i in range(3):
+        logits = get_model(CFG).forward(
+            params, {"tokens": np.asarray(run, np.int32)[None]}, CFG)[0]
+        t = int(np.argmax(np.asarray(logits)[0, -1]))
+        assert int(got[i]) == t
+        run.append(t)
+    # k clamps to the drafter's max_len headroom
+    assert d.propose(np.arange(62) % CFG.vocab_size, 4).shape == (2,)
+
+
+def test_spec_config_validation():
+    with pytest.raises(ValueError, match="spec.k"):
+        SpecConfig(k=0)
+    with pytest.raises(ValueError, match="drafter"):
+        SpecConfig(drafter="oracle")
+    with pytest.raises(ValueError, match="ngram_min"):
+        SpecConfig(ngram_min=3, ngram_max=2)
+
+
+def test_engine_rejects_bad_spec_combinations():
+    params = _params(CFG)
+    with pytest.raises(ValueError, match="mixed"):
+        ServeEngine(CFG, params, paged=True, mixed=False, spec=SPEC)
+    with pytest.raises(ValueError, match="greedy"):
+        ServeEngine(CFG, params, paged=True, mixed=True, spec=SPEC,
+                    temperature=0.7, chunk_tokens=32)
+    with pytest.raises(ValueError, match="chunk_tokens"):
+        ServeEngine(CFG, params, paged=True, mixed=True, spec=SPEC,
+                    slots=4, chunk_tokens=8)
+
+
+# ------------------------------------------------- greedy bit-identity
+
+def test_spec_matches_plain_dense_multislot():
+    params = _params(CFG)
+    rng = np.random.default_rng(0)
+    prompts = _prompts(rng, CFG, (5, 23, 9)) + \
+        _repetitive_prompts(rng, CFG, 2)
+    plain, _ = _serve(CFG, params, prompts, 8)
+    spec, se = _serve(CFG, params, prompts, 8, spec=SPEC)
+    assert spec == plain
+    assert se.stats["spec_drafted"] > 0
+    # draft rows ride the one mixed program: no extra trace shapes
+    assert se.stats["prefill_traces"] == 0
+    assert se.stats["decode_traces"] <= 2
+
+
+def test_spec_matches_plain_moe():
+    params = _params(MOE_CFG, seed=5)
+    rng = np.random.default_rng(5)
+    prompts = _prompts(rng, MOE_CFG, (5, 19)) + \
+        _repetitive_prompts(rng, MOE_CFG, 2)
+    plain, _ = _serve(MOE_CFG, params, prompts, 6)
+    spec, se = _serve(MOE_CFG, params, prompts, 6, spec=SPEC)
+    assert spec == plain
+    assert se.stats["spec_drafted"] > 0
+
+
+def test_spec_matches_plain_encdec():
+    params = _params(AUDIO_CFG, seed=2)
+    rng = np.random.default_rng(2)
+    prompts = _prompts(rng, AUDIO_CFG, (4, 9)) + \
+        _repetitive_prompts(rng, AUDIO_CFG, 2)
+    frames = [rng.standard_normal(
+        (AUDIO_CFG.encoder_ctx, AUDIO_CFG.d_model)).astype(np.float32)
+        for _ in prompts]
+    plain, _ = _serve(AUDIO_CFG, params, prompts, 5, frames=frames,
+                      max_len=48)
+    spec, se = _serve(AUDIO_CFG, params, prompts, 5, frames=frames,
+                      max_len=48, spec=SPEC)
+    assert spec == plain
+    assert se.stats["spec_drafted"] > 0
+
+
+def test_spec_matches_plain_prefix_cache_lazy():
+    """Shared system prompt + lazy growth: drafted KV writes land on
+    extend-fresh private pages (base block CoW'd first), so the shared
+    prefix stays byte-stable — the second adopter's output would diverge
+    otherwise."""
+    params = _params(CFG)
+    rng = np.random.default_rng(3)
+    system = rng.integers(0, CFG.vocab_size, size=(33,)).astype(np.int32)
+    prompts = [np.concatenate(
+        [system, rng.integers(0, CFG.vocab_size, size=(int(n),))])
+        .astype(np.int32) for n in (5, 9, 3, 14)]
+    kw = dict(slots=4, prefix_cache=True, lazy=True, chunk_tokens=24)
+    plain, pe = _serve(CFG, params, prompts, 6, **kw)
+    spec, se = _serve(CFG, params, prompts, 6, spec=SPEC, **kw)
+    assert spec == plain
+    assert se.stats["spec_drafted"] > 0
+    # sharing still collapses the system prompt to one physical copy
+    assert se.stats["prefix_hit_blocks"] >= pe.stats["prefix_hit_blocks"]
+
+
+def test_spec_matches_plain_pallas_backend():
+    params = _params(CFG)
+    rng = np.random.default_rng(11)
+    prompts = _prompts(rng, CFG, (5, 17)) + _repetitive_prompts(rng, CFG, 2)
+    plain, _ = _serve(CFG, params, prompts, 6, attn_backend="pallas")
+    spec, se = _serve(CFG, params, prompts, 6, attn_backend="pallas",
+                      spec=SPEC)
+    assert spec == plain
+    assert se.stats["spec_drafted"] > 0
+    assert se.stats["decode_backend"] == "pallas"
+
+
+def test_spec_matches_plain_tp2_dp2():
+    params = _params(CFG)
+    rng = np.random.default_rng(7)
+    prompts = _prompts(rng, CFG, (5, 21)) + _repetitive_prompts(rng, CFG, 2)
+    plain, _ = _serve(CFG, params, prompts, 6)
+    [mesh] = replica_meshes(1, 2)
+    tp2, te = _serve(CFG, params, prompts, 6, mesh=mesh, spec=SPEC)
+    assert tp2 == plain
+    assert te.stats["spec_drafted"] > 0
+    router = ReplicaRouter(CFG, params, dp=2, slots=2, max_len=64,
+                           paged=True, mixed=True, chunk_tokens=16,
+                           spec=SPEC)
+    for i, p in enumerate(prompts):
+        router.submit(i, p, max_new=6)
+    res = router.run()
+    assert {i: list(res[i].out) for i in res} == plain
+    assert router.stats["spec_drafted"] > 0
+
+
+# ------------------------------------------------ speedup + accounting
+
+def test_repetitive_context_accepts_multiple_tokens_per_step():
+    """On tiled-motif prompts prompt-lookup drafting must beat one
+    token per (step, decoding slot) — the accounting the driver's
+    serve_spec_tokens_per_step summary and the bench column report."""
+    params = _params(CFG)
+    rng = np.random.default_rng(4)
+    prompts = _repetitive_prompts(rng, CFG, 4)
+    plain, pe = _serve(CFG, params, prompts, 16)
+    spec, se = _serve(CFG, params, prompts, 16, spec=SPEC)
+    assert spec == plain
+
+    def per_slot_step(st):
+        return (st["decode_tokens"] - st["prefills"]) / \
+            max(st["decode_slot_steps"], 1)
+
+    # without speculation the ratio is exactly 1.0 by construction
+    assert per_slot_step(pe.stats) == pytest.approx(1.0)
+    assert per_slot_step(se.stats) > 1.0
+    assert se.stats["spec_accepted"] > 0
+    assert se.stats["decode_steps"] < pe.stats["decode_steps"]
+
+
+def test_driver_exposes_spec_metrics():
+    """The async driver observes the engine's speculative counters into
+    Prometheus instruments: drafted/accepted totals, the cumulative
+    accept-rate gauge, and the per-(step, slot) accepted-tokens summary
+    — and stays truthful when a step emits several tokens at once."""
+    from repro.serve.driver import AsyncDriver
+    params = _params(CFG)
+    rng = np.random.default_rng(12)
+    prompts = _repetitive_prompts(rng, CFG, 3)
+    eng = ServeEngine(CFG, params, slots=2, max_len=64, paged=True,
+                      mixed=True, chunk_tokens=16, spec=SPEC)
+    drv = AsyncDriver(eng, start=False)
+    streams = [drv.submit(p, max_new=12, rid=i)
+               for i, p in enumerate(prompts)]
+    drv.start()
+    records = {s.rid: s.result(timeout=60.0) for s in streams}
+    drv.stop(drain=True)
+    assert all(r.done for r in records.values())
+    m = drv.metrics
+    assert m.spec_drafted.value == eng.stats["spec_drafted"] > 0
+    assert m.spec_accepted.value == eng.stats["spec_accepted"] > 0
+    assert m.spec_accept_rate.value == pytest.approx(
+        eng.stats["spec_accepted"] / eng.stats["spec_drafted"])
+    assert m.spec_tokens_per_step.count > 0
+    # every request got one TTFT and exactly max_new streamed tokens
+    assert m.ttft.count == len(prompts)
+    assert all(len(r.out) == 12 for r in records.values())
+
+
+# ------------------------------------------------- stop-condition edges
+
+def test_eos_inside_accepted_draft():
+    """Self-drafting with the verifier's own params accepts essentially
+    every draft, so EOS lands mid-chain: output must stop exactly at the
+    EOS token — min(max_new, tokens-until-EOS) — token-identical to the
+    non-speculative run with the same eos_id."""
+    params = _params(CFG)
+    prompts = _prompts(np.random.default_rng(9), CFG, (6,))
+    base, _ = _serve(CFG, params, prompts, 14)
+    # pick a token whose FIRST occurrence is deep enough that, under
+    # (near-)full acceptance, it is emitted inside an accepted draft
+    eos, at = None, None
+    for idx in range(2, len(base[0])):
+        if base[0].index(base[0][idx]) == idx:
+            eos, at = base[0][idx], idx
+            break
+    assert eos is not None, "degenerate greedy chain"
+    spec = SpecConfig(k=4, drafter="model", draft_cfg=CFG,
+                      draft_params=params)
+    plain, _ = _serve(CFG, params, prompts, 14, eos_id=eos)
+    specr, se = _serve(CFG, params, prompts, 14, eos_id=eos, spec=spec)
+    assert specr == plain
+    assert specr[0] == base[0][:at + 1]          # nothing past the EOS
+    assert se.stats["spec_accepted"] > 0
+
+
+def test_max_new_inside_accepted_draft():
+    """max_new cuts an accepted chain mid-draft: never a surplus token."""
+    params = _params(CFG)
+    prompts = _prompts(np.random.default_rng(10), CFG, (5, 8))
+    spec = SpecConfig(k=4, drafter="model", draft_cfg=CFG,
+                      draft_params=params)
+    for new in (2, 3, 7):
+        plain, _ = _serve(CFG, params, prompts, new)
+        specr, _ = _serve(CFG, params, prompts, new, spec=spec)
+        assert specr == plain
+        assert all(len(o) == new for o in specr.values())
+
+
+# --------------------------------------------- rollback page bookkeeping
+
+def test_rejection_rollback_across_page_boundary_drains_clean():
+    """page_size=4 forces rejected drafts to straddle page boundaries:
+    the speculative reservation is rolled back to the accepted cursor
+    every step, and after the run every page is back in the free list —
+    no leaked draft pages, no stale references."""
+    params = _params(CFG)
+    rng = np.random.default_rng(7)
+    prompts = _prompts(rng, CFG, (5, 11, 7)) + \
+        _repetitive_prompts(rng, CFG, 2)
+    kw = dict(slots=2, lazy=True, page_size=4, max_len=64)
+    plain, _ = _serve(CFG, params, prompts, 10, **kw)
+    spec, se = _serve(CFG, params, prompts, 10, spec=SPEC, **kw)
+    assert spec == plain
+    assert se.stats["spec_drafted"] > se.stats["spec_accepted"]  # rejects
+    assert se._alloc.free_pages == se._alloc.num_pages
+    assert se._alloc.pages_in_use == 0
+    assert list(se._alloc.owners()) == []
+
+
+def test_drafts_on_cow_shared_pages_leave_prefix_intact():
+    """Prefix-shared pages under speculation: every adopter of the
+    shared system prompt decodes the same continuation it would without
+    drafting — drafted writes never reach a shared page."""
+    params = _params(CFG)
+    rng = np.random.default_rng(8)
+    system = np.tile(rng.integers(0, CFG.vocab_size, size=(4,)), 5) \
+        .astype(np.int32)                      # repetitive shared prefix
+    prompts = [np.concatenate(
+        [system, rng.integers(0, CFG.vocab_size, size=(int(n),))])
+        .astype(np.int32) for n in (3, 6, 4)]
+    kw = dict(slots=3, prefix_cache=True, lazy=True, page_size=4,
+              chunk_tokens=24, max_len=64)
+    plain, pe = _serve(CFG, params, prompts, 8, **kw)
+    spec, se = _serve(CFG, params, prompts, 8, spec=SPEC, **kw)
+    assert spec == plain
+    assert se.stats["spec_drafted"] > 0
+    assert se.stats["prefix_hit_blocks"] > 0   # sharing actually happened
+
+
+def test_allocator_rollback_drops_private_tail():
+    a = PageAllocator(8, 4)
+    a.alloc("s", 10)                           # 3 pages
+    assert a.free_pages == 5
+    dropped = a.rollback("s", 5)               # keeps 2 pages
+    assert len(dropped) == 1 and a.free_pages == 6
+    assert len(a.pages_of("s")) == 2
+    # the reservation can regrow over the rolled-back range
+    assert a.extend("s", 10) is not None
+    assert a.free_pages == 5
+
+
+def test_allocator_rollback_len_only_shrink():
+    """Zero pages dropped still lowers the token length, or the next
+    extend would trip the no-shrink guard."""
+    a = PageAllocator(8, 4)
+    a.alloc("s", 10)
+    assert a.rollback("s", 9) == []
+    assert len(a.pages_of("s")) == 3
+    assert a.extend("s", 12) == []             # within the held 3 pages
+
+
+def test_allocator_rollback_shared_page_stays_live():
+    a = PageAllocator(4, 4)
+    [p] = a.alloc("s", 4)
+    a.ref(p)                                   # e.g. prefix-cache pin
+    assert a.rollback("s", 0) == [p]
+    assert a.free_pages == 3                   # pin keeps the page live
+    a.deref(p)
+    assert a.free_pages == 4
+
+
+def test_allocator_rollback_errors():
+    a = PageAllocator(4, 4)
+    with pytest.raises(KeyError):
+        a.rollback("nobody", 0)
+    a.alloc("s", 4)
+    with pytest.raises(ValueError, match="use extend"):
+        a.rollback("s", 9)
+    assert a.rollback("s", 4) == []            # no-op at the reservation
