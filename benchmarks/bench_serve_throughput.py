@@ -99,11 +99,12 @@ def bench(params, *, slots: int, n_requests: int, max_new: int,
           lazy: bool = False, tp: int = 1, dp: int = 1,
           mixed=None, chunk_tokens=None, mixed_workload: bool = False,
           attn_backend: str = "gather", spec_k: int = 0,
-          drafter: str = "ngram", repetitive: bool = False) -> dict:
+          drafter: str = "ngram", repetitive: bool = False,
+          trace_level: int = 1, trace_out=None) -> dict:
     kw = dict(slots=slots, max_len=max_len, paged=paged,
               page_size=page_size, kv_pages=kv_pages,
               prefix_cache=prefix_cache, lazy=lazy,
-              attn_backend=attn_backend)
+              attn_backend=attn_backend, trace_level=trace_level)
     if mixed is not None:
         kw["mixed"] = mixed
     if chunk_tokens is not None:
@@ -154,6 +155,14 @@ def bench(params, *, slots: int, n_requests: int, max_new: int,
     # so "decode_traces == 1" means one trace in EVERY engine
     reps = st.get("replicas", [st])
     rep0 = eng.engines[0] if dp > 1 else eng
+    # span coverage: phase laps over step wall time (the >= 0.95
+    # acceptance bar); export covers BOTH passes — the tracer is not
+    # reset with the counters, which is exactly what an operator wants
+    from repro.serve.tracing import phase_coverage
+    tracers = eng.tracers if hasattr(eng, "tracers") else [eng.tracer]
+    coverage = round(phase_coverage(tracers), 4)
+    if trace_out:
+        eng.export_trace(trace_out)
     return {
         "slots": slots,
         "tp": tp,
@@ -183,6 +192,8 @@ def bench(params, *, slots: int, n_requests: int, max_new: int,
         "prefill_chunk_tokens": st.get("prefill_chunk_tokens", 0),
         "paged": rep0.paged,
         "attn_backend": getattr(rep0, "attn_backend", "gather"),
+        "trace_level": trace_level,
+        "trace_phase_coverage": coverage,
         "out_digest": digest,
         "peak_kv_bytes": eng.kv_bytes(),
         "per_device_peak_kv_bytes": eng.per_device_kv_bytes(),
@@ -267,6 +278,17 @@ def main():
                     help="tile short random motifs into every prompt — "
                          "the prompt-lookup drafter's best case; the "
                          "workload the speculative-smoke job drives")
+    ap.add_argument("--trace-level", type=int, choices=(0, 1, 2),
+                    default=1,
+                    help="engine tracer detail: 0 off, 1 lifecycle + "
+                         "phase records (default), 2 per-chunk detail; "
+                         "rows carry trace_phase_coverage (phase laps "
+                         "over step wall time)")
+    ap.add_argument("--trace-out", type=str, default="", metavar="PATH",
+                    help="write the LAST bench row's Chrome/Perfetto "
+                         "trace_event JSON to PATH (with "
+                         "--mixed-workload that is the mixed-mode row "
+                         "at the largest slot count)")
     ap.add_argument("--json", type=str, default="",
                     help="write results to this path (default: stdout)")
     args = ap.parse_args()
@@ -278,7 +300,8 @@ def main():
                          n_requests=args.requests, max_new=args.max_new,
                          max_len=args.max_len, paged=True,
                          page_size=args.page_size, kv_pages=args.kv_pages,
-                         tp=tp, dp=dp)
+                         tp=tp, dp=dp, trace_level=args.trace_level,
+                         trace_out=args.trace_out or None)
                    for tp in (1, 2, 4) for dp in (1, 2)
                    if tp * dp <= jax.device_count()]
     elif args.mixed_workload:
@@ -293,7 +316,9 @@ def main():
                          chunk_tokens=args.chunk_tokens,
                          mixed_workload=True,
                          spec_k=args.spec_k if mixed else 0,
-                         drafter=args.drafter)
+                         drafter=args.drafter,
+                         trace_level=args.trace_level,
+                         trace_out=args.trace_out or None)
                    for s in args.slots for mixed in (False, True)]
     else:
         results = [bench(params, slots=s, n_requests=args.requests,
@@ -305,7 +330,9 @@ def main():
                          tp=args.tp, dp=args.dp,
                          attn_backend=args.attn_backend,
                          spec_k=args.spec_k, drafter=args.drafter,
-                         repetitive=args.repetitive)
+                         repetitive=args.repetitive,
+                         trace_level=args.trace_level,
+                         trace_out=args.trace_out or None)
                    for s in args.slots]
     report = {"config": TINY.name, "results": results}
     out = json.dumps(report, indent=2)

@@ -153,7 +153,7 @@ class Session:
               prefix_cache: bool = False, lazy: bool = False,
               scheduler=None, mixed: Optional[bool] = None,
               chunk_tokens: int = 256, attn_backend: str = "gather",
-              spec=None):
+              spec=None, trace_level: int = 1):
         """Continuous-batching engine over this session's params: one
         batched jitted decode advances the whole slot table per step.
         ``temperature > 0`` switches the on-device sampler from greedy to
@@ -229,7 +229,14 @@ class Session:
         for one program launch, bit-identical greedy output. Requires
         the mixed step, greedy sampling (``temperature == 0``) and
         ``chunk_tokens >= slots * (k + 1)``; composes with
-        prefix+lazy sharing, both attn backends and ``tp``/``dp``."""
+        prefix+lazy sharing, both attn backends and ``tp``/``dp``.
+
+        Observability: ``trace_level`` gates the engine's built-in
+        tracer (serve/tracing.py) — 0 off, 1 (default) request lifecycle
+        events + per-step phase records at O(1) cost, 2 adds per-chunk /
+        per-decode-step detail events. ``engine.export_trace(path)``
+        (router: merged across replicas) writes a Chrome/Perfetto
+        ``trace_event`` JSON of the run."""
         p = plan if plan is not None else self.plan
         if tp is None or dp is None:
             if p is not None and p.degrees.pp > 1:
@@ -246,7 +253,8 @@ class Session:
                   paged=paged, page_size=page_size, kv_pages=kv_pages,
                   prefix_cache=prefix_cache, lazy=lazy, scheduler=scheduler,
                   mixed=mixed, chunk_tokens=chunk_tokens,
-                  attn_backend=attn_backend, spec=spec)
+                  attn_backend=attn_backend, spec=spec,
+                  trace_level=trace_level)
         if tp == 1 and dp == 1:
             return ServeEngine(self.cfg, self.params, **kw)
         # serve on the session's own device placement when its mesh IS the

@@ -133,10 +133,20 @@ def main():
                     help="--serve: bind address")
     ap.add_argument("--watchdog-timeout", type=float, default=30.0,
                     help="--serve: seconds one engine step may run "
-                         "before the watchdog logs a slot/pool "
-                         "diagnostic dump and cancels-and-requeues the "
-                         "active slots via the preemption path "
+                         "before the watchdog logs a flight-recorder "
+                         "dump and cancels-and-requeues the active "
+                         "slots via the preemption path "
                          "(<= 0 disables the watchdog)")
+    ap.add_argument("--trace-level", type=int, choices=(0, 1, 2),
+                    default=1,
+                    help="tracer detail: 0 off, 1 lifecycle events + "
+                         "per-step phase records (default), 2 adds "
+                         "per-chunk/per-decode-step events")
+    ap.add_argument("--trace-out", default=None, metavar="PATH",
+                    help="write a Chrome/Perfetto trace_event JSON of "
+                         "the run to PATH (batch mode: after the run; "
+                         "--serve: on ctrl-c shutdown); load it in "
+                         "ui.perfetto.dev or chrome://tracing")
     args = ap.parse_args()
 
     cfg = get_smoke(args.arch).with_(dtype="float32")
@@ -153,19 +163,24 @@ def main():
                     prefix_cache=args.prefix_cache, lazy=args.lazy,
                     mixed=False if (args.no_mixed or args.dense) else None,
                     chunk_tokens=args.chunk_tokens,
-                    attn_backend=args.attn_backend, spec=spec)
+                    attn_backend=args.attn_backend, spec=spec,
+                    trace_level=args.trace_level)
     if args.serve:
         wt = args.watchdog_timeout if args.watchdog_timeout > 0 else None
         server = session.serve_http(host=args.host, port=args.port,
                                     watchdog_timeout=wt, **serve_kw)
         print(f"serving {args.arch} on {server.url} "
-              f"(POST /generate, GET /metrics, GET /healthz; "
+              f"(POST /generate, GET /metrics, GET /healthz, "
+              f"GET /debug/flight, GET /debug/trace; "
               f"watchdog {'off' if wt is None else f'{wt}s'}) "
               f"— ctrl-c to stop", flush=True)
         try:
             while True:
                 time.sleep(3600)
         except KeyboardInterrupt:
+            if args.trace_out:
+                server.driver.export_trace(args.trace_out)
+                print(f"trace written to {args.trace_out}", flush=True)
             server.close(drain=False)
         return
     eng = session.serve(**serve_kw)
@@ -225,6 +240,10 @@ def main():
               f"{accepted}/{drafted} drafts accepted "
               f"({accepted / max(drafted, 1):.2f}), "
               f"{per_step:.2f} accepted tokens/decode step")
+    if args.trace_out:
+        obj = eng.export_trace(args.trace_out)
+        print(f"  trace: {len(obj['traceEvents'])} events written to "
+              f"{args.trace_out} (load in ui.perfetto.dev)")
     for rid in sorted(results):
         r = results[rid]
         print(f"  req {rid}{'' if r.done else ' [truncated]'}: {r.out}")

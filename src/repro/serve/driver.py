@@ -163,6 +163,7 @@ class AsyncDriver:
         self.abort_step = threading.Event()
         self._stall_fired = threading.Event()
         self._step_t0: Optional[float] = None
+        self._last_step_done: Optional[float] = None
         self._snapshot: Dict = {}
         self._threads: List[threading.Thread] = []
         # chunk-boundary cancellation: a mixed-step engine polls this
@@ -295,6 +296,54 @@ class AsyncDriver:
         """Prometheus text: driver latency metrics + engine telemetry."""
         return self.metrics.render(extra=self.stats())
 
+    # ---------------------------------------- observability (lock-free)
+    # None of these take the driver lock: a load balancer probing
+    # /healthz or an operator pulling /debug/flight must get an answer
+    # even while a stalled step holds the lock. Reads are monotonic
+    # timestamps, deque lengths, and tracer state (its own small lock).
+
+    def health(self) -> Dict:
+        """Liveness + progress signals for ``GET /healthz``: a wedged-
+        but-alive engine shows a growing ``last_step_age_s`` while
+        ``queue_depth`` piles up."""
+        now = time.monotonic()
+        done = self._last_step_done
+        t0 = self._step_t0
+        return {
+            "ok": True,
+            "queue_depth": sum(len(e.queue) for e in self._engines()),
+            "step_count": sum(e.stats["step_count"]
+                              for e in self._engines()),
+            "last_step_age_s": None if done is None else now - done,
+            "step_in_flight_s": None if t0 is None else now - t0,
+            "watchdog_fired": self._stall_fired.is_set(),
+        }
+
+    def flight(self, last: Optional[int] = None) -> Dict:
+        """Flight-recorder snapshot: per-replica step-record rings and
+        request spans plus the watchdog's pre-step snapshot."""
+        now = time.monotonic()
+        done = self._last_step_done
+        return {
+            "last_step_age_s": None if done is None else now - done,
+            "snapshot": dict(self._snapshot),
+            "replicas": [e.tracer.flight(last) for e in self._engines()
+                         if getattr(e, "tracer", None) is not None],
+        }
+
+    def trace(self) -> Dict:
+        """Merged Chrome ``trace_event`` JSON object across replicas."""
+        from repro.serve.tracing import chrome_trace
+        return chrome_trace([e.tracer for e in self._engines()
+                             if getattr(e, "tracer", None) is not None])
+
+    def export_trace(self, path: str) -> Dict:
+        """Write the merged Chrome/Perfetto trace JSON to ``path``."""
+        from repro.serve.tracing import export_chrome_trace
+        return export_chrome_trace(
+            path, [e.tracer for e in self._engines()
+                   if getattr(e, "tracer", None) is not None])
+
     # ------------------------------------------------------------- loop
     def _busy(self) -> bool:
         engines = self._engines()
@@ -303,7 +352,12 @@ class AsyncDriver:
     def _take_snapshot(self):
         """Pre-step state for the watchdog's diagnostic dump — captured
         under the lock so the dump itself never touches the engine."""
-        snap = {"queue_depth": 0, "active": [], "pools": []}
+        snap = {"queue_depth": 0, "active": [], "pools": [],
+                # the id the in-flight step WILL get (engines stamp
+                # begin_step with the pre-increment step_count), so the
+                # stall report can name the stalled step
+                "step_ids": [e.stats["step_count"]
+                             for e in self._engines()]}
         for i, e in enumerate(self._engines()):
             snap["queue_depth"] += len(e.queue)
             for s, req in enumerate(e.active):
@@ -343,11 +397,13 @@ class AsyncDriver:
         finally:
             self._step_t0 = None
         now = time.monotonic()
+        self._last_step_done = now
         self.metrics.step_latency.observe(now - t0)
         if self._stall_fired.is_set():
             self._recover()
         self._observe_chunking()
         self._observe_spec()
+        self._drain_phases()
         self._drain_tokens(now)
         self.metrics.queue_depth.set(
             sum(len(e.queue) for e in self._engines()))
@@ -398,6 +454,18 @@ class AsyncDriver:
             self.metrics.spec_tokens_per_step.observe(
                 (d["decode_tokens"] - d["prefills"])
                 / d["decode_slot_steps"])
+
+    def _drain_phases(self):
+        """Feed every engine's pending per-step phase timings into the
+        ``serve_step_phase_seconds{phase=...}`` histogram (the tracer's
+        pending deque decouples engine stepping from metric export)."""
+        for e in self._engines():
+            t = getattr(e, "tracer", None)
+            if t is None:
+                continue
+            for _sid, phases, _dur in t.drain_phases():
+                for ph, sec in phases.items():
+                    self.metrics.step_phase.observe(ph, sec)
 
     def _drain_tokens(self, now: float):
         """Push every token the last step appended to its stream and
@@ -467,8 +535,14 @@ class AsyncDriver:
                 self.abort_step.set()
 
     def _stall_report(self, overrun: float) -> str:
+        """Flight-recorder dump for a fired watchdog: names the stalled
+        step id(s), every active slot, pool occupancy, and the tail of
+        the step-record ring. Lock-free by construction — the pre-step
+        snapshot plus tracer reads (the tracer has its OWN lock; the
+        stalled thread is inside a device call, not inside the tracer)."""
         snap = self._snapshot
-        lines = [f"serve watchdog: step stalled {overrun:.2f}s "
+        sid = "/".join(str(i) for i in snap.get("step_ids", [])) or "?"
+        lines = [f"serve watchdog: step {sid} stalled {overrun:.2f}s "
                  f"(timeout {self.watchdog_timeout}s); "
                  f"queue_depth={snap.get('queue_depth', 0)}"]
         for row in snap.get("active", []):
@@ -479,6 +553,17 @@ class AsyncDriver:
             lines.append(
                 "  pool r{replica}: {pages_in_use} pages in use, "
                 "{free_pages} free".format(**pool))
+        for i, e in enumerate(self._engines()):
+            t = getattr(e, "tracer", None)
+            if t is None or not t.enabled:
+                continue
+            for rec in t.flight(last=3)["steps"]:
+                ph = " ".join(f"{k}={v * 1e3:.2f}ms"
+                              for k, v in rec["phases"].items())
+                lines.append(
+                    f"  flight r{i} step {rec['step_id']}: "
+                    f"dur={rec['dur'] * 1e3:.2f}ms "
+                    f"produced={rec['produced']} {ph}")
         lines.append("  recovery: cancel-and-requeue every active slot "
                      "via the preemption path once the step yields")
         return "\n".join(lines)

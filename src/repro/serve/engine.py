@@ -167,6 +167,8 @@ from repro.serve.sampling import sample_tokens
 from repro.serve.scheduler import FifoLeastProgress
 from repro.serve.step import (pack_token_budget, page_bucket,
                               prefill_bucket, scatter_prefill_pages)
+from repro.serve.tracing import NULL_STEP, Tracer, chrome_trace, \
+    export_chrome_trace
 
 #: archs the token-only engine can serve without per-request extras.
 TOKEN_ONLY_ARCHS = ("dense", "moe", "ssm", "hybrid")
@@ -212,7 +214,8 @@ class ServeEngine:
                  prefix_cache: bool = False, lazy: bool = False,
                  scheduler=None, mesh=None, strategy=None,
                  mixed: Optional[bool] = None, chunk_tokens: int = 256,
-                 attn_backend: str = "gather", spec=None):
+                 attn_backend: str = "gather", spec=None,
+                 tracer=None, trace_level: int = 1):
         if cfg.arch_type not in SERVABLE_ARCHS:
             raise ValueError(
                 f"{cfg.name}: the engine drives token/frame decoders "
@@ -385,6 +388,15 @@ class ServeEngine:
                       # runs (PR 8); a string — metrics render it as a
                       # labeled serve_engine_decode_backend info gauge
                       "decode_backend": attn_backend}
+        # -------- observability (PR 10, serve/tracing.py): request span
+        # trees + per-step phase records + flight-recorder rings. Always
+        # present — trace_level=0 turns every hook into an O(1) no-op;
+        # the default level keeps lifecycle events and step records,
+        # level 2 adds per-chunk detail to the request trees. A DP
+        # router stamps each replica's ``tracer.replica`` after
+        # construction so merged exports get distinct lanes.
+        self.tracer = tracer if tracer is not None \
+            else Tracer(level=trace_level)
         self._rng = jax.random.key(seed)
         self._sched = scheduler if scheduler is not None \
             else FifoLeastProgress()
@@ -722,6 +734,13 @@ class ServeEngine:
                       images=images, priority=int(priority),
                       deadline=deadline)
         self.queue.append(req)
+        # span-tree root: the scheduler explains its ordering fields so
+        # the trace records WHY admission will pick this request when
+        explain = getattr(self._sched, "explain", None)
+        self.tracer.req_event(
+            rid, "submitted", prompt_tokens=int(prompt.size),
+            max_new=int(max_new), queue_depth=len(self.queue),
+            **(explain(req) if explain is not None else {}))
         return req
 
     def _expire_queued(self, now: float):
@@ -739,6 +758,8 @@ class ServeEngine:
                 req.expired = True
                 self.finished[req.rid] = req
                 self.stats["expired"] += 1
+                self.tracer.finish_request(req.rid, "expired",
+                                           tokens=len(req.out))
             else:
                 kept.append(req)
         self.queue = kept
@@ -901,6 +922,8 @@ class ServeEngine:
                 self.queue.popleft()
             else:
                 del self.queue[qi]
+            self.tracer.req_event(req.rid, "admitted", slot=s,
+                                  ctx_tokens=n, resumed=bool(req.out))
             if self.paged:
                 self._sync_ptab()
             padded = np.zeros(blen, np.int32)
@@ -919,8 +942,11 @@ class ServeEngine:
             self.stats["decode_tokens"] += 1
             tok = int(tok)
             req.out.append(tok)
+            self.tracer.req_tokens(req.rid, 1)
             if req.first_tok_t is None:
                 req.first_tok_t = time.monotonic()
+                self.tracer.req_event(req.rid, "first_token",
+                                      prefill_tokens=n)
             self._pos[s] = n
             self._last[s] = tok
             # honor max_new / EOS / capacity on the PREFILL-sampled token:
@@ -931,6 +957,8 @@ class ServeEngine:
             if len(req.out) >= req.max_new or hit_eos or n >= self.max_len:
                 req.done = True
                 self.finished[req.rid] = req
+                self.tracer.finish_request(req.rid, "completed",
+                                           tokens=len(req.out))
                 if self.paged:
                     self._release_pages(s)
             else:
@@ -1053,6 +1081,9 @@ class ServeEngine:
             self.active[s] = req
             self._pos[s] = 0
             self._last[s] = 0
+            self.tracer.req_event(req.rid, "admitted", slot=s,
+                                  ctx_tokens=n, covered=int(covered),
+                                  resumed=bool(req.out))
             # cursor = next context position to compute; covered KV is
             # skipped EXCEPT the final prompt token, which must run for
             # its first-token logits (its write goes to the null page)
@@ -1078,6 +1109,8 @@ class ServeEngine:
         req = self.active[s]
         req.done = True
         self.finished[req.rid] = req
+        self.tracer.finish_request(req.rid, "completed",
+                                   tokens=len(req.out))
         self.active[s] = None
         if self.paged:
             self._release_pages(s)
@@ -1097,6 +1130,8 @@ class ServeEngine:
             self._release_pages(s)
         self._sched.requeue(self.queue, req)
         self.stats["preemptions"] += 1
+        self.tracer.req_preempted(req.rid, slot=s, tokens=len(req.out),
+                                  mid_prefill=st is not None)
         if st is not None:
             for d, dst in list(self._pf.items()):
                 if dst["dep"] is not None and dst["dep"][0] == s \
@@ -1260,23 +1295,33 @@ class ServeEngine:
             return self._step_mixed()
         t0 = time.perf_counter()
         before = self.stats["decode_tokens"]
+        tr = self.tracer.begin_step(self.stats["step_count"])
         self._expire_queued(time.monotonic())
+        tr.lap("bookkeeping")
         self._admit()
+        # the legacy path prefills synchronously inside admission (its
+        # own device program), so it gets its own phase label instead of
+        # hiding inside bookkeeping
+        tr.lap("admit")
         if self.paged and (self.lazy or self._prefix is not None):
             self._grow_and_cow()
+        tr.lap("bookkeeping")
         mask = np.array([r is not None for r in self.active])
         if mask.any():
             if self.paged:
                 self._sync_ptab()
+            tr.lap("pack")
             with self._ctx():
                 tok, self._cache = self._decode(
                     self.params, self._cache,
                     self._dev(self._last[:, None].astype(np.int32)),
                     self._dev(self._pos.astype(np.int32)), self._dev(mask),
                     self._next_rng())
+            tr.lap("dispatch")
             self.stats["decode_steps"] += 1
             self.stats["decode_slot_steps"] += int(mask.sum())
             toks = np.asarray(tok)
+            tr.lap("sync")
             for s in range(self.slots):
                 req = self.active[s]
                 if req is None:
@@ -1286,6 +1331,10 @@ class ServeEngine:
                 self._pos[s] += 1
                 self._last[s] = t
                 self.stats["decode_tokens"] += 1
+                tr.note_decode(s, req.rid, 1)
+                self.tracer.req_tokens(req.rid, 1)
+                self.tracer.req_detail(req.rid, "decode", slot=s,
+                                       pos=int(self._pos[s]))
                 if self._prefix is not None and \
                         self._pos[s] % self.page_size == 0:
                     self._register_decode_block(s, req)
@@ -1293,11 +1342,15 @@ class ServeEngine:
                 if len(req.out) >= req.max_new or hit_eos or \
                         self._pos[s] >= self.max_len:
                     self._retire(s)
-        return self._finish_step(t0, before)
+        return self._finish_step(t0, before, tr)
 
-    def _finish_step(self, t0: float, before: int) -> int:
-        """Shared step epilogue: token count + timing telemetry."""
+    def _finish_step(self, t0: float, before: int, tr=NULL_STEP) -> int:
+        """Shared step epilogue: token count + timing telemetry, and the
+        step's trace record (residual time folds into bookkeeping so the
+        phase laps partition the whole step)."""
         produced = self.stats["decode_tokens"] - before
+        tr.lap("bookkeeping")
+        self.tracer.end_step(tr, produced)
         dt = time.perf_counter() - t0
         self.stats["step_count"] += 1
         self.stats["wall_time_s"] += dt
@@ -1307,6 +1360,20 @@ class ServeEngine:
             self.stats["tokens_per_s_ewma"] = \
                 rate if ewma <= 0 else 0.8 * ewma + 0.2 * rate
         return produced
+
+    # ---- observability surface (delegates to the tracer) -------------
+
+    def trace(self) -> dict:
+        """Chrome ``trace_event`` JSON object for this engine's tracer."""
+        return chrome_trace([self.tracer])
+
+    def export_trace(self, path: str) -> dict:
+        """Write the Chrome/Perfetto trace JSON to ``path``."""
+        return export_chrome_trace(path, [self.tracer])
+
+    def flight(self, last: int | None = None) -> dict:
+        """Flight-recorder snapshot (recent step records + spans)."""
+        return self.tracer.flight(last)
 
     def _step_mixed(self) -> int:
         """One MIXED token-slot step (the tentpole refactor): expire
@@ -1322,16 +1389,18 @@ class ServeEngine:
         """
         t0 = time.perf_counter()
         before = self.stats["decode_tokens"]
+        tr = self.tracer.begin_step(self.stats["step_count"])
         abort = self.abort_event
         if abort is not None and abort.is_set():
             # chunk-boundary cancellation (watchdog): skip launching this
             # step's program entirely — control returns to the driver at
             # sub-step latency and recovery requeues the slots
-            return self._finish_step(t0, before)
+            return self._finish_step(t0, before, tr)
         self._expire_queued(time.monotonic())
         self._admit_mixed()
         if self.lazy or self._prefix is not None:
             self._grow_and_cow()
+        tr.lap("bookkeeping")
         # clear satisfied dependencies: the donor finished its prefill
         # (left _pf with full coverage) or its cursor passed the needed
         # point; a donor preempted EARLIER already cascaded (see
@@ -1346,6 +1415,7 @@ class ServeEngine:
                         if self.active[s] is not None and s not in self._pf]
         drafts = self._propose_drafts(decode_slots) \
             if self._drafter is not None else {}
+        tr.lap("draft")
         pkey = getattr(self._sched, "prefill_key", None)
         items = sorted(
             self._pf.items(),
@@ -1358,7 +1428,7 @@ class ServeEngine:
               "dep": st["dep"]} for s, st in items])
         if not decode_slots and not allot:
             self._admit_mixed()
-            return self._finish_step(t0, before)
+            return self._finish_step(t0, before, tr)
         T = self.chunk_tokens
         tokens = np.zeros((T, 1), np.int32)
         pos = np.zeros(T, np.int32)
@@ -1409,14 +1479,17 @@ class ServeEngine:
         if abort is not None and abort.is_set():
             # the watchdog fired while admission/encode/grow ran: yield
             # at this chunk boundary instead of launching the program
-            return self._finish_step(t0, before)
+            return self._finish_step(t0, before, tr)
         self._sync_ptab()
+        tr.lap("pack")
         with self._ctx():
             tok, self._cache = self._mixed(
                 self.params, self._cache, self._dev(tokens),
                 self._dev(pos), self._dev(slot_v), self._dev(active),
                 self._dev(wnull), self._next_rng())
+        tr.lap("dispatch")
         toks = np.asarray(tok)
+        tr.lap("sync")
         if decode_slots:
             self.stats["decode_steps"] += 1
             self.stats["decode_slot_steps"] += len(decode_slots)
@@ -1438,19 +1511,35 @@ class ServeEngine:
             # consume token-by-token, exactly mirroring the non-spec
             # epilogue: max_new / EOS / capacity stop the chain mid-draft
             # (output length stays min(max_new, tokens-until-EOS)).
+            emitted = 0
+            retired = False
             for t in accepted:
                 req.out.append(t)
                 self._pos[s] += 1
                 self._last[s] = t
                 self.stats["decode_tokens"] += 1
+                # count BEFORE a possible retire: finish_request seals the
+                # span, so the token total must already be up to date
+                self.tracer.req_tokens(req.rid, 1)
+                emitted += 1
                 if self._prefix is not None and \
                         self._pos[s] % self.page_size == 0:
                     self._register_decode_block(s, req)
                 hit_eos = self.eos_id is not None and t == self.eos_id
                 if len(req.out) >= req.max_new or hit_eos or \
                         self._pos[s] >= self.max_len:
+                    # detail event first — retiring seals the span tree
+                    self.tracer.req_detail(req.rid, "decode", slot=s,
+                                           tokens=emitted,
+                                           drafted=len(d), accepted=m)
                     self._retire(s)
+                    retired = True
                     break
+            if not retired:
+                self.tracer.req_detail(req.rid, "decode", slot=s,
+                                       tokens=emitted, drafted=len(d),
+                                       accepted=m)
+            tr.note_decode(s, req.rid, emitted, drafted=len(d), accepted=m)
             if self.lazy and len(d) and self.active[s] is req:
                 # rejection rollback: drop draft pages beyond the
                 # accepted cursor (retired slots already freed all pages)
@@ -1470,6 +1559,11 @@ class ServeEngine:
             st = self._pf[s]
             st["cursor"] = start + count
             self.stats["prefill_chunk_tokens"] += count
+            rid = self.active[s].rid
+            tr.note_chunk(s, rid, start, count)
+            self.tracer.req_chunk_tokens(rid, count)
+            self.tracer.req_detail(rid, "prefill_chunk", slot=s,
+                                   start=start, count=count)
             if self._prefix is not None:
                 # progressive registration: only blocks the cursor has
                 # fully passed — a later request (or a preemption
@@ -1488,8 +1582,11 @@ class ServeEngine:
                 self.stats["prefills"] += 1
                 self.stats["decode_tokens"] += 1
                 req.out.append(t)
+                self.tracer.req_tokens(req.rid, 1)
                 if req.first_tok_t is None:
                     req.first_tok_t = time.monotonic()
+                    self.tracer.req_event(req.rid, "first_token",
+                                          prefill_tokens=int(st["n"]))
                 self._pos[s] = st["n"]
                 self._last[s] = t
                 hit_eos = self.eos_id is not None and t == self.eos_id
@@ -1499,8 +1596,10 @@ class ServeEngine:
                     self.finished[req.rid] = req
                     self.active[s] = None
                     self._release_pages(s)
+                    self.tracer.finish_request(req.rid, "completed",
+                                               tokens=len(req.out))
         self._admit_mixed()
-        return self._finish_step(t0, before)
+        return self._finish_step(t0, before, tr)
 
     def _register_decode_block(self, s: int, req: Request):
         """DECODE-GENERATED prefix registration: slot ``s``'s cursor just

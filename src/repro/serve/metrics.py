@@ -33,6 +33,12 @@ Metric glossary (the names ``GET /metrics`` exposes):
   ``serve_e2e_seconds``             summary   submit -> request completion
   ``serve_step_seconds``            summary   one engine step, wall time
   ``serve_step_occupancy``          summary   active slots entering a step
+  ``serve_step_phase_seconds``      summary   host time one step spent in
+                                              each phase, labelled
+                                              ``{phase="bookkeeping|draft|
+                                              pack|dispatch|sync|admit"}``
+                                              (fed from the tracer's
+                                              per-step phase laps)
   ``serve_prefill_chunk_tokens``    summary   prefill tokens one mixed step
                                               processed as chunks (0 on
                                               pure-decode steps; bounded by
@@ -218,6 +224,14 @@ class Histogram:
             window = sorted(self._samples)
         return [quantile(window, q) for q in qs]
 
+    def snapshot(self) -> Tuple[List[float], float, int]:
+        """(sorted window, sum, count) captured under ONE lock
+        acquisition, so a render's quantiles and its ``_sum``/``_count``
+        lines describe the same instant even while another thread
+        observes concurrently."""
+        with self._lock:
+            return sorted(self._samples), self._sum, self._count
+
     def reset(self):
         with self._lock:
             self._samples.clear()
@@ -225,12 +239,67 @@ class Histogram:
             self._sum = 0.0
 
     def render(self) -> List[str]:
-        qs = self.quantiles(QUANTILES)
-        lines = [f'{self.name}{{quantile="{q}"}} {_fmt(v)}'
-                 for q, v in zip(QUANTILES, qs)]
+        window, total, count = self.snapshot()
+        lines = [f'{self.name}{{quantile="{q}"}} {_fmt(quantile(window, q))}'
+                 for q in QUANTILES]
+        lines.append(f"{self.name}_sum {_fmt(total)}")
+        lines.append(f"{self.name}_count {count}")
+        return lines
+
+
+class LabeledHistogram:
+    """A family of :class:`Histogram` children keyed by one label value
+    (e.g. ``serve_step_phase_seconds{phase="dispatch"}``): one registered
+    name, one ``TYPE summary`` header, per-label quantile/sum/count
+    series. Children are created on first ``observe`` — label sets are
+    small and bounded by the caller (the engine's phase names)."""
+
+    kind = "summary"
+
+    def __init__(self, name: str, help: str = "", *, label: str = "label",
+                 window: int = 4096):
+        self.name, self.help = name, help
+        self.label = label
+        self.window = window
+        self._lock = threading.Lock()
+        self._children: Dict[str, Histogram] = {}
+
+    def child(self, value: str) -> Histogram:
+        value = str(value)
         with self._lock:
-            lines.append(f"{self.name}_sum {_fmt(self._sum)}")
-            lines.append(f"{self.name}_count {self._count}")
+            h = self._children.get(value)
+            if h is None:
+                h = self._children[value] = Histogram(
+                    self.name, window=self.window)
+            return h
+
+    def observe(self, label_value: str, value: float):
+        self.child(label_value).observe(value)
+
+    def labels(self) -> List[str]:
+        with self._lock:
+            return sorted(self._children)
+
+    def reset(self):
+        with self._lock:
+            children = list(self._children.values())
+        for h in children:
+            h.reset()
+
+    def render(self) -> List[str]:
+        with self._lock:
+            items = sorted(self._children.items())
+        lines: List[str] = []
+        for lv, h in items:
+            window, total, count = h.snapshot()
+            for q in QUANTILES:
+                lines.append(
+                    f'{self.name}{{{self.label}="{lv}",quantile="{q}"}} '
+                    f'{_fmt(quantile(window, q))}')
+            lines.append(
+                f'{self.name}_sum{{{self.label}="{lv}"}} {_fmt(total)}')
+            lines.append(
+                f'{self.name}_count{{{self.label}="{lv}"}} {count}')
         return lines
 
 
@@ -258,6 +327,12 @@ class MetricsRegistry:
     def histogram(self, name: str, help: str = "", *,
                   window: int = 4096) -> Histogram:
         return self._register(Histogram(name, help, window=window))
+
+    def labeled_histogram(self, name: str, help: str = "", *,
+                          label: str = "label",
+                          window: int = 4096) -> LabeledHistogram:
+        return self._register(
+            LabeledHistogram(name, help, label=label, window=window))
 
     def get(self, name: str):
         with self._lock:
@@ -314,6 +389,11 @@ class ServeMetrics:
         self.occupancy = r.histogram(
             "serve_step_occupancy",
             "Active slots entering each engine step", window=window)
+        self.step_phase = r.labeled_histogram(
+            "serve_step_phase_seconds",
+            "Host-side time one engine step spent in each phase "
+            "(bookkeeping/draft/pack/dispatch/sync; legacy adds admit)",
+            label="phase", window=window)
         self.prefill_chunk = r.histogram(
             "serve_prefill_chunk_tokens",
             "Prefill tokens processed as chunks by one mixed step",

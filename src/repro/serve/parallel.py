@@ -92,6 +92,11 @@ class ReplicaRouter:
                         **engine_kw)
             for mesh in self.meshes]
         self.cfg = cfg
+        # stamp each engine's tracer with its replica index so a merged
+        # Chrome export gets one process lane per replica (ids collide
+        # otherwise: every engine numbers its steps/slots from zero)
+        for r, e in enumerate(self.engines):
+            e.tracer.replica = r
         self._home: Dict[int, int] = {}      # rid -> replica index
         self._affine: Dict[Tuple, int] = {}  # first-block key -> replica
 
@@ -228,3 +233,24 @@ class ReplicaRouter:
         """Resident decode-state bytes on one device (replicas are
         disjoint, so the max over engines is the per-device figure)."""
         return max(e.per_device_kv_bytes() for e in self.engines)
+
+    # ----------------------------------------------------- observability
+    @property
+    def tracers(self) -> List:
+        """Every replica's tracer (already replica-stamped)."""
+        return [e.tracer for e in self.engines]
+
+    def trace(self) -> Dict:
+        """ONE merged Chrome ``trace_event`` object: replica ``r`` is
+        process lane ``r``, so per-replica step/slot ids never collide."""
+        from repro.serve.tracing import chrome_trace
+        return chrome_trace(self.tracers)
+
+    def export_trace(self, path: str) -> Dict:
+        """Write the merged Chrome/Perfetto trace JSON to ``path``."""
+        from repro.serve.tracing import export_chrome_trace
+        return export_chrome_trace(path, self.tracers)
+
+    def flight(self, last: Optional[int] = None) -> Dict:
+        """Per-replica flight-recorder snapshots, one merged dict."""
+        return {"replicas": [t.flight(last) for t in self.tracers]}

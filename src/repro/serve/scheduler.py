@@ -57,7 +57,7 @@ counts).
 """
 from __future__ import annotations
 
-from typing import Deque, List, Optional, Sequence, Tuple
+from typing import Deque, Dict, List, Optional, Sequence, Tuple
 
 
 class FifoLeastProgress:
@@ -107,6 +107,16 @@ class FifoLeastProgress:
         order is preserved (it was admitted before anything now queued)."""
         queue.appendleft(req)
 
+    def explain(self, req) -> Dict:
+        """Admission-ordering fields for the request's trace (the engine
+        stamps them onto the ``submitted`` span event): which policy saw
+        the request and what key will order it."""
+        d = self._deadline(req)
+        out = {"policy": self.name}
+        if d != float("inf"):
+            out["deadline"] = d
+        return out
+
 
 class Priority(FifoLeastProgress):
     """Priority admission + lowest-priority preemption.
@@ -141,3 +151,8 @@ class Priority(FifoLeastProgress):
         request was admitted first, and ``next_index`` already lets any
         higher-priority arrival jump it."""
         queue.appendleft(req)
+
+    def explain(self, req) -> Dict:
+        out = super().explain(req)
+        out["priority"] = int(getattr(req, "priority", 0))
+        return out

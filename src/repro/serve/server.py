@@ -23,8 +23,18 @@ Three endpoints, no dependencies beyond ``http.server``:
     as ``serve_engine_*`` gauges (serve/metrics.py documents the
     glossary).
   * ``GET /healthz`` — ``{"status": "ok", ...}`` liveness probe with
-    queue/slot occupancy and the watchdog-fired count; a load balancer
-    can drain a replica whose watchdog keeps firing.
+    queue/slot occupancy, ``last_step_age_s``/``step_in_flight_s``
+    progress signals (a wedged-but-alive engine shows a growing age
+    while the queue piles up), and the watchdog-fired count; served
+    LOCK-FREE so it answers even while a stalled step holds the driver
+    lock — a load balancer can drain a replica whose watchdog keeps
+    firing.
+  * ``GET /debug/flight`` — flight-recorder snapshot (recent step
+    records with per-phase timings + live/finished request span trees,
+    per replica), also lock-free.
+  * ``GET /debug/trace`` — the merged Chrome/Perfetto ``trace_event``
+    JSON export (replica lanes as processes, engine-step + slot lanes
+    as threads); load it in ui.perfetto.dev or chrome://tracing.
 
 ``ServeHTTPServer`` binds a ``ThreadingHTTPServer`` (port 0 picks a free
 port — tests use that), serves on a daemon thread, and ``close()`` shuts
@@ -98,18 +108,22 @@ def _make_handler(driver: AsyncDriver,
             if self.path == "/metrics":
                 self._send_text(driver.render_metrics())
             elif self.path == "/healthz":
-                stats = driver.stats()
-                self._send_json({
-                    "status": "ok",
-                    "busy": driver._busy(),
-                    "queue_depth": int(
-                        driver.metrics.queue_depth.value),
-                    "active_slots": int(
-                        driver.metrics.active_slots.value),
-                    "watchdog_fired": int(
-                        driver.metrics.watchdog_fired.value),
-                    "step_count": stats.get("step_count", 0),
-                })
+                # LOCK-FREE on purpose: driver.health() never takes the
+                # driver lock, so a load balancer still gets an answer —
+                # with a growing last_step_age_s exposing the wedge —
+                # while a stalled step holds it
+                h = driver.health()
+                h["status"] = "ok"
+                h["busy"] = driver._busy()
+                h["active_slots"] = int(
+                    driver.metrics.active_slots.value)
+                h["watchdog_fired"] = int(
+                    driver.metrics.watchdog_fired.value)
+                self._send_json(h)
+            elif self.path == "/debug/flight":
+                self._send_json(driver.flight())
+            elif self.path == "/debug/trace":
+                self._send_json(driver.trace())
             else:
                 self._send_json({"error": f"no route {self.path}"}, 404)
 

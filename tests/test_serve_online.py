@@ -12,6 +12,7 @@ socket (/generate JSON + chunked streaming, /metrics Prometheus text,
 import json
 import logging
 import math
+import re
 import time
 import urllib.error
 import urllib.request
@@ -319,11 +320,13 @@ def test_watchdog_detects_injected_stall(caplog):
     eng.submit(100, prompts[0], max_new=2)
     eng.run()
 
-    calls = {"n": 0}
+    calls = {"n": 0, "stall_id": None}
 
     def step_fn(drv):
         calls["n"] += 1
         if calls["n"] == 2:                     # rid 0 is mid-decode now
+            # the id the stalled step WOULD get (what the dump must name)
+            calls["stall_id"] = eng.stats["step_count"]
             deadline = time.monotonic() + 20.0
             while not drv.abort_step.is_set() and \
                     time.monotonic() < deadline:
@@ -345,8 +348,16 @@ def test_watchdog_detects_injected_stall(caplog):
     assert eng.stats["preemptions"] >= 1        # recovery used the
     #                                             engine's existing path
     text = caplog.text
-    assert "step stalled" in text
-    assert "rid=0" in text                      # per-slot diagnostic row
+    # flight-recorder dump content: the stalled STEP ID by number, the
+    # active slot row (slot id + rid), and pool occupancy
+    m = re.search(r"step (\d+) stalled", text)
+    assert m, text
+    assert int(m.group(1)) == calls["stall_id"]
+    assert re.search(r"slot r0/s\d+: rid=0", text)
+    assert re.search(r"pool r0: \d+ pages in use, \d+ free", text)
+    # ... plus the step-record ring tail with per-phase timings
+    assert re.search(r"flight r0 step \d+:", text)
+    assert "dispatch=" in text
     assert "requeued 1 active request(s)" in text
     # detection latency: fired well within a few timeouts of the stall
     assert time.monotonic() - t0 < 20.0
